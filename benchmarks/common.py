@@ -1,0 +1,64 @@
+"""Shared harness for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import odl_head, oselm, pruning
+from repro.data import har
+
+
+def timer_us(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def boot_core(splits, run_seed: int, theta, n_hidden: int = 128, variant: str = "hash"):
+    """Initial-training boot of the paper's core (§3 steps 1-2)."""
+    elm_cfg = oselm.OSELMConfig(
+        n_in=har.N_FEATURES, n_hidden=n_hidden, n_out=har.N_CLASSES,
+        variant=variant, seed=run_seed + 77, ridge=1e-2,
+    )
+    if theta == "auto":
+        pcfg = pruning.PruneConfig(min_trained=max(n_hidden, 288))
+    else:
+        pcfg = pruning.PruneConfig(ladder=(float(theta),), min_trained=max(n_hidden, 288))
+    cfg = odl_head.ODLCoreConfig(elm=elm_cfg, prune=pcfg)
+    st0 = oselm.init_state_batch(
+        elm_cfg, jnp.asarray(splits.train_x), jax.nn.one_hot(splits.train_y, har.N_CLASSES)
+    )
+    return cfg, odl_head.init_state(cfg)._replace(elm=st0)
+
+
+def drift_trial(run_seed: int, theta, n_hidden: int = 128, variant: str = "hash",
+                dataset_seed: int = 0):
+    """One full §3 protocol run; returns dict of accuracies + comm volume."""
+    splits = har.generate(seed=dataset_seed)
+    cfg, core = boot_core(splits, run_seed, theta, n_hidden, variant)
+    ox, oy, tx, ty = har.odl_split(splits, 0.6, run_seed)
+
+    before = float(odl_head.accuracy(
+        core, jnp.asarray(splits.test0_x), jnp.asarray(splits.test0_y), cfg))
+    noodl_after = float(odl_head.accuracy(core, jnp.asarray(tx), jnp.asarray(ty), cfg))
+
+    core, outs = jax.jit(functools.partial(odl_head.run_training_phase, cfg=cfg))(
+        core, jnp.asarray(ox), jnp.asarray(oy)
+    )
+    after = float(odl_head.accuracy(core, jnp.asarray(tx), jnp.asarray(ty), cfg))
+    comm = float(pruning.comm_volume_fraction(core.prune))
+    return dict(before=before, after=after, noodl_after=noodl_after, comm=comm,
+                queries=int(core.prune.queries), skips=int(core.prune.skips))
+
+
+def mean_std(rows, key):
+    v = np.asarray([r[key] for r in rows])
+    return float(v.mean()), float(v.std())

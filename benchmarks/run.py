@@ -1,0 +1,43 @@
+"""Benchmark entry point: one function per paper table/figure + roofline.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--trials N] [--skip-drift]
+
+Prints human-readable blocks followed by a ``name,value,derived`` CSV (the
+repo harness convention).  Roofline rows appear when results/dryrun.jsonl
+exists (produced by ``python -m repro.launch.dryrun``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=5,
+                    help="drift-protocol repetitions (paper uses 20)")
+    ap.add_argument("--skip-drift", action="store_true",
+                    help="skip the minutes-long accuracy experiments")
+    args = ap.parse_args(argv)
+
+    from benchmarks import kernels_bench, paper_tables, roofline
+
+    rows = []
+    rows += paper_tables.table1_memory()
+    rows += paper_tables.table4_core()
+    rows += kernels_bench.main()
+    if not args.skip_drift:
+        rows += paper_tables.table2_params(trials=min(3, args.trials))
+        rows += paper_tables.table3_drift(trials=args.trials)
+        rows += paper_tables.fig3_pruning(trials=args.trials)
+        rows += paper_tables.fig4_power(trials=min(3, args.trials))
+    rows += roofline.main()
+
+    print("\nname,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro: fleet-scale supervised ODL with auto data pruning (JAX/Pallas)."""

@@ -1,0 +1,22 @@
+"""har-odl — the paper's own configuration (no backbone).
+
+OS-ELM core with n=561, N=128, m=6 (paper §2.3 prototype), ODLHash variant,
+auto data pruning with the {1, .64, .32, .16, .08} ladder and X=10.
+"""
+
+from repro.core import drift, odl_head, oselm, pruning
+
+
+def full(n_hidden: int = 128, variant: str = "hash") -> odl_head.ODLCoreConfig:
+    elm = oselm.OSELMConfig(
+        n_in=561, n_hidden=n_hidden, n_out=6, variant=variant, ridge=1e-2
+    )
+    return odl_head.ODLCoreConfig(
+        elm=elm,
+        prune=pruning.PruneConfig.for_hidden(n_hidden),
+        drift=drift.DriftConfig(),
+    )
+
+
+def smoke() -> odl_head.ODLCoreConfig:
+    return full(n_hidden=16)

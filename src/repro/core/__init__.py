@@ -1,0 +1,23 @@
+"""The paper's contribution: supervised ODL (OS-ELM) + auto data pruning.
+
+Submodules:
+  xorshift     — Xorshift16 (7,9,8) PRNG weights (sequential + counter-based)
+  oselm        — OS-ELM predict / rank-k RLS sequential training
+  pruning      — P1P2 confidence metric + auto-theta ladder controller
+  drift        — lightweight EWMA drift detector (mode switching)
+  labels       — teacher query protocol + communication metering
+  odl_head     — Algorithm 1 composed; fleet/vmap helpers
+  memory_model — paper Table 1/2 analytic memory & parameter model
+  power_model  — paper Table 4 / Fig. 4 timing & power model
+"""
+
+from repro.core import (  # noqa: F401
+    drift,
+    labels,
+    memory_model,
+    odl_head,
+    oselm,
+    power_model,
+    pruning,
+    xorshift,
+)

@@ -1,0 +1,119 @@
+"""Lightweight concept-drift detection (paper Alg. 1 line 3, citing Yamada+23).
+
+The paper delegates to "existing data drift detection algorithms"; we provide
+a jit/vmap-compatible detector in the same spirit as the cited lightweight
+on-device method: exponentially-weighted moving statistics of a scalar score
+with a k-sigma test, plus hysteresis (consecutive hits to enter drift,
+consecutive calm steps to leave).
+
+Two score sources are supported:
+  * feature-moment score: ||x||_1 / n (cheap input-distribution proxy),
+  * confidence score: P1P2 of the local prediction (model-aware proxy).
+The default combines both (max of normalized deviations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    ewma_decay: float = 0.98  # mean/var tracker decay
+    k_sigma: float = 4.0  # deviation threshold
+    warmup: int = 64  # steps before the test is armed
+    enter_hits: int = 3  # consecutive outliers to declare drift
+    exit_calm: int = 32  # consecutive calm steps to end the training phase
+    use_confidence: bool = True
+    use_features: bool = True
+
+
+class DriftState(NamedTuple):
+    mean: jnp.ndarray  # () f32 EWMA of score
+    var: jnp.ndarray  # () f32 EWMA of squared deviation
+    steps: jnp.ndarray  # () int32
+    hits: jnp.ndarray  # () int32 consecutive outliers
+    calm: jnp.ndarray  # () int32 consecutive calm steps
+    active: jnp.ndarray  # () bool — currently in drift (training) mode
+
+
+def init_state() -> DriftState:
+    return DriftState(
+        mean=jnp.zeros((), jnp.float32),
+        var=jnp.ones((), jnp.float32),
+        steps=jnp.zeros((), jnp.int32),
+        hits=jnp.zeros((), jnp.int32),
+        calm=jnp.zeros((), jnp.int32),
+        active=jnp.zeros((), jnp.bool_),
+    )
+
+
+def score(x: jnp.ndarray, outputs: jnp.ndarray, cfg: DriftConfig) -> jnp.ndarray:
+    """Scalar drift score for one sample."""
+    parts = []
+    if cfg.use_features:
+        parts.append(jnp.mean(jnp.abs(x.astype(jnp.float32))))
+    if cfg.use_confidence:
+        top2 = jax.lax.top_k(outputs, 2)[0]
+        parts.append(-(top2[..., 0] - top2[..., 1]))  # low confidence -> high score
+    return jnp.stack(parts).mean()
+
+
+def update(state: DriftState, s: jnp.ndarray, cfg: DriftConfig) -> DriftState:
+    """One detector step on scalar score ``s``; returns the new state.
+
+    ``state.active`` is the mode bit from the paper's Alg. 1: False=predicting,
+    True=training.  IsDrift == rising edge of active; IsTrainDone == falling.
+    """
+    d = s - state.mean
+    # Relative variance floor (0.1% of the signal): the bootstrap estimate
+    # can collapse on near-constant streams, which would turn measurement
+    # noise into permanent "drift".
+    var_floor = jnp.square(1e-3 * jnp.abs(state.mean)) + 1e-12
+    std = jnp.sqrt(jnp.maximum(state.var, var_floor))
+    armed = state.steps >= cfg.warmup
+    outlier = jnp.logical_and(armed, jnp.abs(d) > cfg.k_sigma * std)
+
+    # Track statistics only on non-outlier samples (robustness).
+    decay = jnp.float32(cfg.ewma_decay)
+    upd = jnp.logical_not(outlier)
+    new_mean = jnp.where(upd, decay * state.mean + (1 - decay) * s, state.mean)
+    new_var = jnp.where(
+        upd, decay * state.var + (1 - decay) * jnp.square(d), state.var
+    )
+    # Early steps: bootstrap the tracker with running (not last-sample) stats.
+    boot = state.steps < 8
+    new_mean = jnp.where(boot, (state.mean * state.steps + s) / (state.steps + 1), new_mean)
+    boot_var = (state.var * state.steps + jnp.square(d)) / (state.steps + 1)
+    new_var = jnp.where(boot, jnp.maximum(boot_var, 1e-9), new_var)
+
+    hits = jnp.where(outlier, state.hits + 1, 0)
+    calm = jnp.where(outlier, 0, state.calm + 1)
+
+    enter = hits >= cfg.enter_hits
+    leave = calm >= cfg.exit_calm
+    active = jnp.where(
+        state.active, jnp.logical_not(leave), enter
+    )
+
+    return DriftState(
+        mean=new_mean,
+        var=new_var,
+        steps=state.steps + 1,
+        hits=jnp.where(enter, 0, hits),
+        calm=jnp.where(leave, 0, calm),
+        active=active,
+    )
+
+
+def init_fleet(n_streams: int) -> DriftState:
+    one = init_state()
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_streams,) + a.shape), one)
+
+
+def fleet_update(state: DriftState, s: jnp.ndarray, cfg: DriftConfig) -> DriftState:
+    return jax.vmap(lambda st, ss: update(st, ss, cfg))(state, s)

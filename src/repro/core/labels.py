@@ -1,0 +1,95 @@
+"""Label acquisition via a teacher device (paper §2.2, Fig. 2(c)).
+
+The edge device ships ``x_i`` to the teacher and receives the teacher's
+predicted class ``t_i``, converted to a one-hot ``y_i``.  Communication is
+metered exactly as the paper's BLE accounting: one query uploads the feature
+vector (n * 4 bytes, 32-bit values) and downloads one label byte.
+
+In the paper's evaluation the dataset's ground-truth labels play the role of
+the teacher's predictions; ``ArrayTeacher`` reproduces that.  ``ModelTeacher``
+wraps any jit-compatible predictor (e.g. a large backbone on the pod) — the
+fleet-scale deployment described in DESIGN.md §3.
+
+Fault policy (paper: "queries will be retried later or skipped"): a teacher
+call is issued with a deadline; `runtime/fault.py` wraps teachers so a missed
+deadline yields ``available=False`` and the caller skips the training step —
+the straggler-mitigation pattern at pod scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BYTES_PER_FEATURE = 4  # 32-bit fixed-point features (paper §3.3)
+BYTES_PER_LABEL = 1
+
+
+class CommMeter(NamedTuple):
+    """Bytes moved between edge and teacher (a pytree; vmap for fleets)."""
+
+    up_bytes: jnp.ndarray  # () int64-ish f32 accumulator
+    down_bytes: jnp.ndarray
+
+    @staticmethod
+    def zero() -> "CommMeter":
+        return CommMeter(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+
+    def charge_query(self, n_features: int, queried: jnp.ndarray) -> "CommMeter":
+        q = queried.astype(jnp.float32)
+        return CommMeter(
+            up_bytes=self.up_bytes + q * (n_features * BYTES_PER_FEATURE),
+            down_bytes=self.down_bytes + q * BYTES_PER_LABEL,
+        )
+
+    @property
+    def total(self) -> jnp.ndarray:
+        return self.up_bytes + self.down_bytes
+
+
+def one_hot(t: jnp.ndarray, n_classes: int) -> jnp.ndarray:
+    return jax.nn.one_hot(t, n_classes, dtype=jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayTeacher:
+    """Teacher whose answers are a precomputed label array (paper's eval)."""
+
+    labels: jnp.ndarray  # (T,) int32
+
+    def __call__(self, idx: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        del x
+        return self.labels[idx]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelTeacher:
+    """Teacher backed by a predictor fn(x) -> class (e.g. backbone ensemble)."""
+
+    predict_fn: Callable[[jnp.ndarray], jnp.ndarray]
+
+    def __call__(self, idx: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        del idx
+        return self.predict_fn(x)
+
+
+def acquire(
+    teacher: Callable,
+    idx: jnp.ndarray,
+    x: jnp.ndarray,
+    queried: jnp.ndarray,
+    n_classes: int,
+    meter: CommMeter,
+) -> tuple[jnp.ndarray, jnp.ndarray, CommMeter]:
+    """Fig. 2(c): returns (t, y_onehot, meter').
+
+    The teacher is always *traced* (shapes must be static under jit) but the
+    result is used — and communication charged — only when ``queried``.
+    """
+    t = teacher(idx, x)
+    y = one_hot(t, n_classes)
+    meter = meter.charge_query(x.shape[-1], queried)
+    return t, y, meter

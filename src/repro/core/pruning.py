@@ -1,0 +1,191 @@
+"""Auto data pruning with the P1P2 confidence metric (paper §2.2).
+
+A teacher query (and the subsequent sequential-train step) is SKIPPED iff all
+three hold:
+  1. at least ``min_trained`` samples have been trained (paper: max(N, 288)),
+  2. drift is not currently detected,
+  3. confidence p1 - p2 > theta.
+
+``theta`` is auto-tuned on a fixed ladder (paper §3.2: {1, .64, .32, .16, .08}):
+  * start at the top (theta = 1 ⇒ never skip ⇒ pure supervised ODL);
+  * after X consecutive "successes" — (p1-p2 > theta), or the query happened
+    and the local prediction agreed with the teacher (c == t) — step DOWN;
+  * whenever a query reveals disagreement (c != t), step UP (and reset).
+
+Everything is a jit-compatible pure state transition so it can be vmapped
+over thousands of streams (fleet mode) and fused into serve_step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Paper ladder, ordered from most conservative (never prune) downward.
+DEFAULT_LADDER = (1.0, 0.64, 0.32, 0.16, 0.08)
+DEFAULT_X = 10  # consecutive successes required to relax theta
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneConfig:
+    ladder: tuple = DEFAULT_LADDER
+    x_consec: int = DEFAULT_X
+    min_trained: int = 288  # paper: max(N, 288); resolved by caller
+    enabled: bool = True
+
+    @staticmethod
+    def for_hidden(n_hidden: int, **kw) -> "PruneConfig":
+        return PruneConfig(min_trained=max(n_hidden, 288), **kw)
+
+
+class PruneState(NamedTuple):
+    """Auto-theta controller state (per stream; a pytree)."""
+
+    level: jnp.ndarray  # () int32 — index into the ladder
+    streak: jnp.ndarray  # () int32 — consecutive successes
+    queries: jnp.ndarray  # () int32 — total teacher queries issued
+    skips: jnp.ndarray  # () int32 — total queries pruned
+    phase_trained: jnp.ndarray  # () int32 — samples trained this phase (cond. 1)
+
+
+def init_state() -> PruneState:
+    # One fresh buffer per field: sharing a single zeros() array across
+    # fields breaks donation (same buffer donated twice).
+    def z():
+        return jnp.zeros((), jnp.int32)
+
+    return PruneState(level=z(), streak=z(), queries=z(), skips=z(), phase_trained=z())
+
+
+def reset_phase(state: PruneState) -> PruneState:
+    """New training phase (drift detected): re-arm condition 1."""
+    return state._replace(phase_trained=jnp.zeros((), jnp.int32))
+
+
+def theta_of(state: PruneState, cfg: PruneConfig) -> jnp.ndarray:
+    ladder = jnp.asarray(cfg.ladder, jnp.float32)
+    return ladder[jnp.clip(state.level, 0, len(cfg.ladder) - 1)]
+
+
+def confidence(outputs: jnp.ndarray) -> jnp.ndarray:
+    """P1P2 metric: difference of the top-2 outputs along the last axis.
+
+    OS-ELM regresses one-hot targets, so outputs approximate class posteriors;
+    we clamp to [0, 1] so theta = 1 means "never prune" exactly as in the
+    paper (probability differences cannot exceed 1).
+    """
+    top2 = jax.lax.top_k(outputs, 2)[0]
+    return jnp.clip(top2[..., 0] - top2[..., 1], 0.0, 1.0)
+
+
+def should_query(
+    state: PruneState,
+    outputs: jnp.ndarray,
+    trained_count: jnp.ndarray,
+    drift_active: jnp.ndarray,
+    cfg: PruneConfig,
+) -> jnp.ndarray:
+    """True iff the teacher must be queried for this sample (bool scalar).
+
+    Condition 1 compares the *lifetime* trained-sample count (OS-ELM's
+    ``count``, which includes initial training) against max(N, 288).  The
+    paper's Fig. 4 theta=0.08 point implies a communication volume (~26 %)
+    below the would-be 28.6 % floor of a per-phase warm-up, so the counter
+    cannot reset when the retraining phase starts; drifts are instead handled
+    by condition 2 (``drift_active`` forces querying).
+    """
+    if not cfg.enabled:
+        return jnp.asarray(True)
+    conf = confidence(outputs)
+    high_conf = conf > theta_of(state, cfg)
+    warm = trained_count >= cfg.min_trained
+    prune = warm & jnp.logical_not(drift_active) & high_conf
+    return jnp.logical_not(prune)
+
+
+def update(
+    state: PruneState,
+    queried: jnp.ndarray,  # bool — did we query the teacher this step?
+    agree: jnp.ndarray,  # bool — c == t (only meaningful when queried)
+    conf: jnp.ndarray,  # f32 — p1 - p2 of this sample
+    cfg: PruneConfig,
+) -> PruneState:
+    """Auto-theta transition (paper §2.2, verbatim):
+
+      * success  = (p1-p2 > theta)  OR  (c == t when querying with p1-p2 <= theta)
+      * mismatch = (c != t when querying with p1-p2 <= theta)
+
+    A query forced for other reasons (warm-up, drift) with high confidence
+    still counts as a success via the first clause; a *forced* query that
+    disagrees only raises theta when the sample was genuinely low-confidence.
+    """
+    n_levels = len(cfg.ladder)
+    high = conf > theta_of(state, cfg)
+    low_query = jnp.logical_and(queried, jnp.logical_not(high))
+    success = jnp.logical_or(high, jnp.logical_and(low_query, agree))
+    mismatch = jnp.logical_and(low_query, jnp.logical_not(agree))
+
+    streak = jnp.where(success, state.streak + 1, 0)
+    hit_x = streak >= cfg.x_consec
+    level = state.level
+    level = jnp.where(hit_x, jnp.minimum(level + 1, n_levels - 1), level)
+    level = jnp.where(mismatch, jnp.maximum(level - 1, 0), level)
+    streak = jnp.where(hit_x | mismatch, 0, streak)
+
+    return PruneState(
+        level=level,
+        streak=streak,
+        queries=state.queries + queried.astype(jnp.int32),
+        skips=state.skips + (1 - queried.astype(jnp.int32)),
+        phase_trained=state.phase_trained + queried.astype(jnp.int32),
+    )
+
+
+def comm_volume_fraction(state: PruneState) -> jnp.ndarray:
+    """Queries / (queries + skips) — Fig. 3's communication-volume metric."""
+    total = state.queries + state.skips
+    return jnp.where(total > 0, state.queries / jnp.maximum(total, 1), 1.0)
+
+
+def scan_update(
+    state: PruneState,
+    queried: jnp.ndarray,  # (k,) bool
+    agree: jnp.ndarray,  # (k,) bool
+    conf: jnp.ndarray,  # (k,) f32
+    cfg: PruneConfig,
+) -> PruneState:
+    """Exact sequential controller semantics over a batch of k samples
+    (used by train_step, which gates a whole microbatch against the
+    batch-start theta, then replays the controller sample-by-sample)."""
+
+    def body(st, inp):
+        q, a, c = inp
+        return update(st, q, a, c, cfg), None
+
+    st, _ = jax.lax.scan(body, state, (queried, agree, conf))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Fleet mode
+# ---------------------------------------------------------------------------
+
+
+def init_fleet(n_streams: int) -> PruneState:
+    one = init_state()
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_streams,) + a.shape), one)
+
+
+def fleet_should_query(state, outputs, trained_count, drift_active, cfg):
+    return jax.vmap(lambda s, o, tc, da: should_query(s, o, tc, da, cfg))(
+        state, outputs, trained_count, drift_active
+    )
+
+
+def fleet_update(state, queried, agree, conf, cfg):
+    return jax.vmap(lambda s, q, a, c: update(s, q, a, c, cfg))(
+        state, queried, agree, conf
+    )

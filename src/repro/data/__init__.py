@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic HAR surrogate + sharded token streams."""

@@ -1,0 +1,92 @@
+"""GPipe-style pipeline parallelism over a "stage" mesh axis (shard_map).
+
+For depth-dominated configs (deepseek-coder-33b: 62 layers) pipeline stages
+are an alternative to pure TP.  Layers are split into S stages; each stage's
+params live on one slice of the ``stage`` axis; microbatches stream through
+with ``jax.lax.ppermute`` moving activations stage->stage.  The classic
+GPipe schedule runs S + M - 1 ticks for M microbatches (bubble fraction
+(S-1)/(S+M-1)).
+
+Register formulation: every stage holds one activation register.  At tick t,
+stage s processes microbatch (t - s): stage 0 reads microbatch t from the
+input stream, stages > 0 read the register filled by the upstream ppermute
+of the previous tick, and the last stage publishes finished microbatches.
+Per tick the collective cost is ONE collective-permute of a microbatch
+activation (B_mb, S, d).
+
+Exercised by tests/test_pipeline.py on a CPU subprocess mesh; available as a
+dry-run variant for the hillclimb (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(
+    h: jnp.ndarray,  # (M, B_mb, ...) microbatched activations (replicated)
+    stage_params,  # pytree with leading (n_stages, ...) on every leaf
+    stage_fn: Callable,  # (h_mb, params_one_stage) -> h_mb
+    mesh: Mesh,
+    axis: str = "stage",
+) -> jnp.ndarray:
+    """Run M microbatches through the pipeline; returns (M, B_mb, ...)."""
+    n_stages = mesh.shape[axis]
+    m = h.shape[0]
+    ticks = n_stages + m - 1
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def per_stage(h_stream, params_local):
+        # params_local arrives with a leading singleton stage dim — drop it.
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        last = n_stages - 1
+
+        def tick(carry, t):
+            reg, outputs = carry
+            mb_idx = jnp.clip(t, 0, m - 1)
+            inp = jnp.where(stage == 0, jnp.take(h_stream, mb_idx, axis=0), reg)
+            y = stage_fn(inp, params_local)
+            # Hand off to the next stage (ring; wraparound output is unused).
+            reg_next = jax.lax.ppermute(y, axis, perm)
+            # Last stage publishes microbatch t - last when in range.
+            out_idx = jnp.clip(t - last, 0, m - 1)
+            publish = (stage == last) & (t - last >= 0) & (t - last < m)
+            updated = jax.lax.dynamic_update_index_in_dim(outputs, y, out_idx, 0)
+            outputs = jnp.where(publish, updated, outputs)
+            return (reg_next, outputs), None
+
+        zeros = jnp.zeros_like(h_stream[0])
+        outputs0 = jnp.zeros_like(h_stream)
+        (_, outputs), _ = jax.lax.scan(tick, (zeros, outputs0), jnp.arange(ticks))
+        # Only the last stage holds real outputs; psum replicates them.
+        return jax.lax.psum(outputs * jnp.where(stage == last, 1.0, 0.0).astype(outputs.dtype), axis)
+
+    return jax.shard_map(
+        per_stage,
+        mesh=mesh,
+        in_specs=(P(), P(axis)),
+        out_specs=P(),
+        check_vma=False,
+    )(h, stage_params)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe bubble overhead: (S - 1) / (S + M - 1)."""
+    return (n_stages - 1) / (n_stages + n_microbatches - 1)
+
+
+def sequential_reference(h, stage_params, stage_fn, n_stages: int):
+    """Apply all stages in order to every microbatch (the test oracle)."""
+    out = []
+    for mb in range(h.shape[0]):
+        x = h[mb]
+        for s in range(n_stages):
+            params_s = jax.tree.map(lambda a: a[s], stage_params)
+            x = stage_fn(x, params_s)
+        out.append(x)
+    return jnp.stack(out)

@@ -1,0 +1,168 @@
+"""Logical-axis sharding: one place that maps tensor axes onto the mesh.
+
+Models annotate tensors with *logical* axis names ("batch", "heads", ...);
+this module resolves them to mesh axes via a rule table, so the same model
+code runs on a single CPU device (rules inactive -> no-ops), the 16x16
+single-pod mesh, and the 2x16x16 multi-pod mesh.
+
+Default rule set (DESIGN.md §3):
+  batch   -> ("pod", "data")     data parallel over pods x data axis
+  heads/kv_heads/mlp/experts/vocab -> "model"   tensor/expert parallel
+  seq_sp  -> "model"             sequence parallel (Megatron-SP regions)
+  stream  -> ("pod", "data")     ODL fleet heads ride the data axis
+
+Use ``activate(mesh, rules)`` as a context manager; ``constrain`` is an
+identity outside it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "stream": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "model",  # sequence-parallel regions (hillclimb variant)
+    "seq_kv": "model",  # decode KV/latent cache length (flash-decoding style)
+    "seq_attn": None,  # q rows in attention (enabled when heads don't divide)
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "elm_hidden": None,
+    "elm_out": None,
+    "classes": None,
+    "layers": None,
+    "frames": None,
+}
+
+
+def _current() -> tuple[Optional[Mesh], dict]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: Optional[dict] = None):
+    """Enable sharding constraints for model code under this mesh."""
+    prev = _current()
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        with mesh:
+            yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def resolve(*logical_axes: Optional[str], shape: Optional[tuple] = None) -> P:
+    """Logical axis names -> PartitionSpec under the active rules.
+
+    Rules that name mesh axes absent from the active mesh degrade to
+    replication (so the same model runs on a 2-axis or 3-axis mesh).  When
+    ``shape`` is given, mesh axes that do not divide the dim are dropped
+    (greedy prefix for multi-axis rules) — e.g. batch=1 stays replicated,
+    56 heads on a 16-way model axis fall back to replication (and a schema
+    post-pass reassigns 'model' to a divisible dim, see layers.param_specs).
+    """
+    mesh, rules = _current()
+    axis_names = set(mesh.axis_names) if mesh is not None else set()
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else {}
+
+    spec, used = [], set()
+    for i, name in enumerate(logical_axes):
+        if name is None:
+            spec.append(None)
+            continue
+        target = rules.get(name, None)
+        if target is None:
+            spec.append(None)
+            continue
+        parts = (target,) if isinstance(target, str) else tuple(target)
+        parts = tuple(p for p in parts if p in axis_names and p not in used)
+        if shape is not None:
+            dim = shape[i]
+            kept, prod = [], 1
+            for p in parts:  # greedy prefix that divides the dim
+                if dim % (prod * mesh_shape[p]) == 0:
+                    kept.append(p)
+                    prod *= mesh_shape[p]
+            parts = tuple(kept)
+        used.update(parts)
+        if not parts:
+            spec.append(None)
+        elif len(parts) == 1:
+            spec.append(parts[0])
+        else:
+            spec.append(parts)
+    return P(*spec)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; identity with no mesh."""
+    mesh, _ = _current()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(*logical_axes, shape=x.shape))
+    )
+
+
+def named_sharding(
+    *logical_axes: Optional[str], shape: Optional[tuple] = None
+) -> Optional[NamedSharding]:
+    mesh, _ = _current()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(*logical_axes, shape=shape))
+
+
+def ensure_axis_sharded(spec: P, shape: tuple, axis: str) -> P:
+    """Schema post-pass: add mesh axis `axis` to the largest divisible
+    unsharded dim if the spec does not use it yet.
+
+    Used twice on large params: (1) 'model' — memory safety for archs whose
+    natural TP axis (e.g. 56 heads) does not divide the model axis; (2)
+    'data' — FSDP/ZeRO-3 sharding of master params + moments, without which
+    a 236B model's f32 state cannot fit 16 GB/chip on a 256-chip pod."""
+    mesh, _ = _current()
+    if mesh is None or axis not in mesh.axis_names:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    flat = []
+    for e in entries:
+        flat.extend(e if isinstance(e, tuple) else (e,))
+    if axis in flat:
+        return spec
+    asize = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    cands = [
+        (shape[i], i)
+        for i, e in enumerate(entries)
+        if e is None and shape[i] % asize == 0 and shape[i] >= asize
+    ]
+    if not cands:
+        return spec
+    _, idx = max(cands)
+    entries[idx] = axis
+    return P(*entries)
+
+
+def ensure_model_sharded(spec: P, shape: tuple) -> P:
+    return ensure_axis_sharded(spec, shape, "model")
+
+
+def mesh_or_none() -> Optional[Mesh]:
+    return _current()[0]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+xorshift_proj — ODLHash projection: alpha generated in VMEM from the
+                counter-based Xorshift16(7,9,8) hash (never stored in HBM).
+oselm_update  — fused rank-k RLS update: each P tile read once for both
+                the Woodbury downdate and the beta update.
+ops           — jit'd wrappers with backend dispatch (interpret on CPU).
+ref           — pure-jnp oracles every kernel is tested against.
+"""

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function here defines the exact semantics the corresponding kernel in
+``xorshift_proj.py`` / ``oselm_update.py`` must reproduce; tests sweep shapes
+and dtypes asserting allclose between kernel (interpret=True) and these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import xorshift
+
+
+def xorshift_projection_ref(
+    x: jnp.ndarray,
+    seed: int,
+    n_hidden: int,
+    scale: float = 1.0,
+    activation: str = "sigmoid",
+) -> jnp.ndarray:
+    """H = G(x @ alpha(seed) * scale / sqrt(n_in)) with counter-based alpha.
+
+    x: (..., n_in) f32/bf16.  alpha is the ODLHash matrix (never stored on
+    TPU; here the oracle materializes it).
+    """
+    n_in = x.shape[-1]
+    alpha = xorshift.alpha_hash(seed, n_in, n_hidden)
+    z = x.astype(jnp.float32) @ (alpha * jnp.float32(scale))
+    z = z / jnp.sqrt(jnp.float32(n_in))
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(z)
+    if activation == "relu":
+        return jax.nn.relu(z)
+    if activation == "identity":
+        return z
+    raise ValueError(activation)
+
+
+def oselm_rls_update_ref(
+    P: jnp.ndarray,  # (N, N) f32
+    beta: jnp.ndarray,  # (N, m) f32
+    H: jnp.ndarray,  # (k, N) f32
+    Y: jnp.ndarray,  # (k, m) f32
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Rank-k Woodbury RLS update (paper Fig. 2(d)):
+
+      S     = I_k + H P H^T
+      P'    = P - (P H^T) S^{-1} (H P)
+      beta' = beta + P' H^T (Y - H beta)
+
+    Returns (P', beta').  P' is symmetrized for numerical hygiene.
+    """
+    k = H.shape[0]
+    pht = P @ H.T  # (N, k)
+    s = jnp.eye(k, dtype=jnp.float32) + H @ pht  # (k, k)
+    g = jnp.linalg.solve(s, pht.T)  # (k, N)
+    new_p = P - pht @ g
+    new_p = 0.5 * (new_p + new_p.T)
+    new_beta = beta + new_p @ (H.T @ (Y - H @ beta))
+    return new_p, new_beta
+
+
+def fused_elm_head_ref(
+    x: jnp.ndarray,  # (k, n_in)
+    P: jnp.ndarray,
+    beta: jnp.ndarray,
+    Y: jnp.ndarray,
+    seed: int,
+    scale: float = 1.0,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Projection + RLS update fused (what serve/train steps actually run).
+
+    Returns (H, P', beta').
+    """
+    h = xorshift_projection_ref(x, seed, P.shape[0], scale)
+    new_p, new_beta = oselm_rls_update_ref(P, beta, h, Y)
+    return h, new_p, new_beta

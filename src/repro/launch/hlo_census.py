@@ -1,0 +1,68 @@
+"""Collective-byte census over optimized HLO text.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled module: every ``all-reduce`` / ``all-gather`` / ``reduce-scatter``
+/ ``all-to-all`` / ``collective-permute`` instruction contributes its
+RESULT shape bytes (tuple shapes summed).  This is the per-device traffic
+estimator used by the roofline's collective term.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-reduce.5 = f32[256,1024]{1,0} all-reduce(...)
+#       ROOT %r = (f32[8,16]{...}, u32[]) all-to-all(...)
+_INSTR = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Returns {op_kind: {"count": int, "bytes": int}, "total_bytes": int}.
+
+    ``*-done`` ops are skipped (their ``*-start`` carries the shape), so
+    async pairs are not double-counted.
+    """
+    out: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for m in _INSTR.finditer(hlo_text):
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        b = _shape_bytes(shape_str)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    result = {k: dict(v) for k, v in out.items()}
+    result["total_bytes"] = sum(v["bytes"] for v in out.values())
+    return result

@@ -1,0 +1,74 @@
+"""Serving driver: prefill -> decode loop with the ODL cascade.
+
+Each decode step emits (next-token logits, per-stream ODL prediction,
+query_mask).  Streams whose P1P2 confidence clears auto-theta SKIP the
+teacher — the paper's data pruning as a serving-compute/communication saver.
+Teacher answers arrive asynchronously (here: next loop tick) and are applied
+with ``serve_apply_labels`` (rank-1 RLS per stream).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tokens 32
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import model as model_lib
+
+
+def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 16,
+          gen_tokens: int = 32, max_len: int = 128, seed: int = 0):
+    cfg = configs.get_config(arch, variant)
+    key = jax.random.PRNGKey(seed)
+    params = model_lib.layers.init_params(model_lib.build_schema(cfg), key)
+    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+
+    _, state = jax.jit(
+        lambda p, t: model_lib.prefill(p, t, cfg, max_len=max_len)
+    )(params, prompts)
+
+    step = jax.jit(lambda p, st, t: model_lib.serve_step(p, st, t, cfg))
+    apply_labels = jax.jit(
+        lambda st, f, l, m: model_lib.serve_apply_labels(st, f, l, m, cfg)
+    )
+
+    tok = prompts[:, -1:]
+    queries = skips = 0
+    pending = None  # (feats, mask) awaiting teacher labels
+    rng = np.random.default_rng(seed)
+    for i in range(gen_tokens):
+        logits, state, odl = step(params, state, tok)
+        tok = jnp.argmax(logits, -1)[:, None]
+        q = np.asarray(odl["query_mask"])
+        queries += int(q.sum())
+        skips += int((~q).sum())
+        # Async label acquisition: teacher answers last tick's queries.
+        if pending is not None:
+            feats, mask = pending
+            labels = jnp.asarray(rng.integers(0, cfg.odl.n_out, size=batch), jnp.int32)
+            state = apply_labels(state, feats, labels, mask)
+        pending = (odl["feats"], odl["query_mask"])
+    total = queries + skips
+    print(f"decoded {gen_tokens} tokens x {batch} streams; "
+          f"teacher queries {queries}/{total} ({100*queries/total:.1f}% comm volume)")
+    return queries, skips
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=configs.ARCH_IDS)
+    ap.add_argument("--variant", default="smoke")
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args(argv)
+    serve(args.arch, args.variant, batch=args.batch, gen_tokens=args.tokens)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,393 @@
+"""Attention variants: GQA (full / sliding-window), MLA, cross-attention.
+
+All functions are shape-polymorphic over (B, S) and share one KV-cache
+convention for decode:
+
+  GQA cache:  {"k": (B, S_max, KV, hd), "v": (B, S_max, KV, hd), "pos": (B,)}
+  MLA cache:  {"ckv": (B, S_max, kv_lora), "k_rope": (B, S_max, rope_dim), "pos": (B,)}
+
+MLA caches the *compressed* latent (DeepSeek-V2's serving advantage: 576
+floats/token vs 2 * KV * hd) — the property that makes deepseek-v2 the
+cheapest decode_32k cell in the roofline table.
+
+Grouped einsums keep K/V un-repeated for GQA (no head-replication traffic).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.models import layers
+from repro.models.layers import Leaf, apply_rope, cast, rmsnorm
+
+NEG_INF = -1e9  # bf16-safe large negative
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+
+def gqa_schema(cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    s = {
+        "wq": Leaf((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": Leaf((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Leaf((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Leaf((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = Leaf((hd,), ("head_dim",), init="zeros")
+        s["k_norm"] = Leaf((hd,), ("head_dim",), init="zeros")
+    return s
+
+
+def mla_schema(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim
+    return {
+        "wq_a": Leaf((d, cfg.q_lora_rank), ("embed", None)),
+        "q_a_norm": Leaf((cfg.q_lora_rank,), (None,), init="zeros"),
+        "wq_b": Leaf(
+            (cfg.q_lora_rank, h, qk + cfg.qk_rope_dim), (None, "heads", "head_dim")
+        ),
+        "wkv_a": Leaf((d, cfg.kv_lora_rank + cfg.qk_rope_dim), ("embed", None)),
+        "kv_a_norm": Leaf((cfg.kv_lora_rank,), (None,), init="zeros"),
+        "wkv_b": Leaf(
+            (cfg.kv_lora_rank, h, qk + cfg.v_head_dim), (None, "heads", "head_dim")
+        ),
+        "wo": Leaf((h, cfg.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def cross_schema(cfg: ModelConfig) -> dict:
+    d, hd, h = cfg.d_model, cfg.resolved_head_dim, cfg.n_heads
+    return {
+        "wq": Leaf((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": Leaf((d, h, hd), ("embed", "heads", "head_dim")),
+        "wv": Leaf((d, h, hd), ("embed", "heads", "head_dim")),
+        "wo": Leaf((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(
+    q_pos: jnp.ndarray,  # (B, Sq)
+    k_pos: jnp.ndarray,  # (B, Sk)
+    causal: bool,
+    window: Optional[int],
+    k_valid: Optional[jnp.ndarray] = None,  # (B, Sk) bool
+) -> jnp.ndarray:
+    """(B, 1, 1, Sq, Sk) additive bias."""
+    dq = q_pos[:, :, None]
+    dk = k_pos[:, None, :]
+    ok = jnp.ones_like(dq + dk, dtype=bool)
+    if causal:
+        ok &= dk <= dq
+    if window is not None:
+        ok &= dq - dk < window
+    if k_valid is not None:
+        ok &= k_valid[:, None, :]
+    return jnp.where(ok, 0.0, NEG_INF)[:, None, None, :, :].astype(jnp.float32)
+
+
+def _grouped_attention(q, k, v, bias):
+    """q: (B,Sq,KV,G,hd); k/v: (B,Sk,KV,hd); bias: (B,1,1,Sq,Sk) -> (B,Sq,KV,G,hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(hd) + jnp.transpose(bias, (0, 2, 1, 3, 4))
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v, preferred_element_type=jnp.float32)
+
+
+def _chunked_grouped_attention(
+    q, k, v, q_pos, k_pos, causal: bool, window: Optional[int], chunk: int
+):
+    """Flash-style online-softmax attention, scanned over KV chunks.
+
+    Never materializes the (Sq, Sk) score matrix: per chunk the working set
+    is (B, KV, G, Sq, chunk) — O(S * chunk) instead of O(S^2).  Numerics:
+    running max/denominator in f32 (the FlashAttention recurrence).
+    q: (B,Sq,KV,G,hd); k/v: (B,Sk,KV,hd); q_pos/k_pos: (B, Sq)/(B, Sk).
+    """
+    b, sq, kv, g, hd = q.shape
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    assert sk % chunk == 0, f"kv len {sk} not divisible by chunk {chunk}"
+    nc = sk // chunk
+    scale = np.float32(1.0 / np.sqrt(hd))
+
+    kc = k.reshape(b, nc, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    kpc = k_pos.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        m, l, acc = carry  # (B,KV,G,Sq) f32, same, (B,Sq,KV,G,hd) f32
+        k_i, v_i, kp_i = xs
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q, k_i, preferred_element_type=jnp.float32)
+        s = s * scale
+        ok = jnp.ones((b, sq, chunk), bool)
+        dq = q_pos[:, :, None]
+        dk = kp_i[:, None, :]
+        if causal:
+            ok &= dk <= dq
+        if window is not None:
+            ok &= dq - dk < window
+        ok &= dk >= 0  # ring slots never written stay masked
+        s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :, :]
+
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)  # rescale old accumulator
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        pv = jnp.einsum(
+            "bkgqs,bskh->bqkgh", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, kv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, kpc))
+    denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return acc / denom
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def _qkv(x, p, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    g = cfg.n_heads // kv
+    q = jnp.einsum("bsd,dhe->bshe", x, cast(p["wq"]))
+    k = jnp.einsum("bsd,dhe->bshe", x, cast(p["wk"]))
+    v = jnp.einsum("bsd,dhe->bshe", x, cast(p["wv"]))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = sharding.constrain(q, "batch", "seq", "heads", "head_dim")
+    k = sharding.constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = sharding.constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q.reshape(b, s, kv, g, hd), k, v
+
+
+def gqa_attention(
+    x: jnp.ndarray,  # (B, S, d) compute dtype
+    p: dict,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,  # (B, S)
+    causal: bool = True,
+    window: Optional[int] = None,
+    return_kv: bool = False,
+):
+    b, s, _ = x.shape
+    q, k, v = _qkv(x, p, cfg, positions)
+    if window is None:
+        window = cfg.sliding_window
+    if cfg.attention_impl == "chunked":
+        o = _chunked_grouped_attention(
+            q, k, v, positions, positions, causal, window, cfg.attention_chunk
+        )
+    else:
+        bias = _mask_bias(positions, positions, causal, window)
+        o = _grouped_attention(q, k, v, bias)
+    o = o.reshape(b, s, cfg.n_heads, cfg.resolved_head_dim).astype(x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", o, cast(p["wo"]))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=layers.COMPUTE_DTYPE):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def gqa_decode(
+    x: jnp.ndarray,  # (B, 1, d)
+    p: dict,
+    cfg: ModelConfig,
+    cache: dict,
+    pos: jnp.ndarray,  # (B,) ABSOLUTE position (tokens already cached)
+    window: Optional[int] = None,
+    ring: bool = False,
+) -> tuple[jnp.ndarray, dict]:
+    """One decode step.  ``ring=True`` treats the cache as a circular buffer
+    of the last ``cache_len`` tokens (sliding-window archs): K/V are written
+    at slot ``pos % cache_len`` but RoPE always uses absolute positions, and
+    each slot's absolute position is reconstructed for masking."""
+    b = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    q, k_new, v_new = _qkv(x, p, cfg, pos[:, None])  # RoPE at absolute pos
+    slot = pos % cache_len if ring else pos
+    if cfg.cache_update == "dus":
+        # O(1)-traffic write at the (synchronized) stream position.
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot[0], 0, 0)
+        )
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot[0], 0, 0)
+        )
+    else:
+        oh = jax.nn.one_hot(slot, cache_len, dtype=cache["k"].dtype)  # (B, S_max)
+        k = _scatter_cache(cache["k"], k_new, oh)
+        v = _scatter_cache(cache["v"], v_new, oh)
+
+    j = jnp.arange(cache_len)[None]  # (1, S_max)
+    if ring:
+        # Absolute position last written to slot j (negative -> never written).
+        k_pos = pos[:, None] - jnp.mod(pos[:, None] - j, cache_len)
+        valid = k_pos >= 0
+    else:
+        k_pos = jnp.broadcast_to(j, (b, cache_len))
+        valid = k_pos <= pos[:, None]
+    bias = _mask_bias(
+        pos[:, None], k_pos, causal=False, window=window or cfg.sliding_window,
+        k_valid=valid,
+    )
+    o = _grouped_attention(q, k.astype(x.dtype), v.astype(x.dtype), bias)
+    o = o.reshape(b, 1, cfg.n_heads, cfg.resolved_head_dim).astype(x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", o, cast(p["wo"]))
+    return out, {"k": k, "v": v}
+
+
+def _scatter_cache(buf, new, oh):
+    """buf (B,S,KV,hd); new (B,1,KV,hd); oh (B,S) one-hot at write position."""
+    keep = (1.0 - oh)[:, :, None, None].astype(buf.dtype)
+    return buf * keep + oh[:, :, None, None].astype(buf.dtype) * new.astype(buf.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(x, p, cfg, positions):
+    q_a = rmsnorm(x @ cast(p["wq_a"]), p["q_a_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", q_a, cast(p["wq_b"]))
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv(ckv, p, cfg):
+    """Expand compressed latent (B,S,kv_lora) -> per-head k_nope, v."""
+    kv = jnp.einsum("bsr,rhe->bshe", ckv, cast(p["wkv_b"]))
+    return jnp.split(kv, [cfg.qk_nope_dim], axis=-1)  # k_nope, v
+
+
+def mla_attention(x, p, cfg: ModelConfig, positions, causal: bool = True,
+                  return_kv: bool = False):
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(x, p, cfg, positions)
+    kv_a = x @ cast(p["wkv_a"])
+    ckv, k_rope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    ckv = rmsnorm(ckv, p["kv_a_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # shared head
+    k_nope, v = _mla_kv(ckv, p, cfg)
+
+    bias = _mask_bias(positions, positions, causal, None)
+    scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    scores = (
+        jnp.einsum("bqhe,bkhe->bhqk", q_nope, k_nope, preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhe,bke->bhqk", q_rope, k_rope[:, :, 0], preferred_element_type=jnp.float32)
+    ) * scale + bias[:, 0]
+    probs = jax.nn.softmax(scores, -1).astype(v.dtype)
+    o = jnp.einsum("bhqk,bkhe->bqhe", probs, v, preferred_element_type=jnp.float32)
+    o = o.astype(x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", o, cast(p["wo"]))
+    if return_kv:
+        return out, (ckv, k_rope[:, :, 0])
+    return out
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=layers.COMPUTE_DTYPE):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(x, p, cfg: ModelConfig, cache, pos):
+    b = x.shape[0]
+    max_len = cache["ckv"].shape[1]
+    q_nope, q_rope = _mla_q(x, p, cfg, pos[:, None])
+
+    kv_a = x @ cast(p["wkv_a"])
+    ckv_new, k_rope_new = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    ckv_new = rmsnorm(ckv_new, p["kv_a_norm"])
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], pos[:, None], cfg.rope_theta)[:, :, 0]
+
+    if cfg.cache_update == "dus":
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos[0], 0)
+        )
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos[0], 0)
+        )
+    else:
+        oh = jax.nn.one_hot(pos, max_len, dtype=cache["ckv"].dtype)
+        ckv = _scatter_flat(cache["ckv"], ckv_new, oh)
+        k_rope = _scatter_flat(cache["k_rope"], k_rope_new, oh)
+
+    k_nope, v = _mla_kv(ckv.astype(x.dtype), p, cfg)
+    k_pos = jnp.broadcast_to(jnp.arange(max_len)[None], (b, max_len))
+    valid = k_pos <= pos[:, None]
+    bias = _mask_bias(pos[:, None], k_pos, causal=False, window=None, k_valid=valid)
+    scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    scores = (
+        jnp.einsum("bqhe,bkhe->bhqk", q_nope, k_nope, preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhe,bke->bhqk", q_rope, k_rope.astype(x.dtype), preferred_element_type=jnp.float32)
+    ) * scale + bias[:, 0]
+    probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhe->bqhe", probs, v)
+    out = jnp.einsum("bshe,hed->bsd", o.astype(x.dtype), cast(p["wo"]))
+    return out, {"ckv": ckv, "k_rope": k_rope}
+
+
+def _scatter_flat(buf, new, oh):
+    """buf (B,S,D); new (B,1,D); oh (B,S)."""
+    keep = 1.0 - oh
+    return buf * keep[:, :, None] + oh[:, :, None] * new.astype(buf.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention(x, p, ctx, src_valid=None):
+    """x: (B, Sq, d) queries; ctx: (B, Sk, d) encoder output."""
+    b, sq, _ = x.shape
+    q = jnp.einsum("bsd,dhe->bshe", x, cast(p["wq"]))
+    k = jnp.einsum("bsd,dhe->bshe", ctx, cast(p["wk"]))
+    v = jnp.einsum("bsd,dhe->bshe", ctx, cast(p["wv"]))
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhe,bkhe->bhqk", q, k, preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(hd)
+    if src_valid is not None:
+        scores += jnp.where(src_valid, 0.0, NEG_INF)[:, None, None, :]
+    probs = jax.nn.softmax(scores, -1).astype(v.dtype)
+    o = jnp.einsum("bhqk,bkhe->bqhe", probs, v)
+    return jnp.einsum("bshe,hed->bsd", o.astype(x.dtype), cast(p["wo"]))

@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)           (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over time (log-depth, linear
+work — the reason recurrentgemma lowers long_500k); decode carries (B, D)
+state in O(1).  The full residual block is Griffin's: conv1d(4) temporal
+mixing + RG-LRU inside a gated (GeGLU-style) branch pair.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.models.layers import Leaf, cast
+
+_C = 8.0
+
+
+def rglru_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "in_x": Leaf((d, w), ("embed", "mlp")),
+        "in_gate": Leaf((d, w), ("embed", "mlp")),
+        "conv_w": Leaf((4, w), (None, "mlp"), scale=0.5),
+        "conv_b": Leaf((w,), ("mlp",), init="zeros"),
+        "w_r": Leaf((w, w), ("mlp", None), scale=0.02),
+        "w_i": Leaf((w, w), ("mlp", None), scale=0.02),
+        "lam": Leaf((w,), ("mlp",), init="ones"),  # softplus(lam) > 0
+        "out": Leaf((w, d), ("mlp", "embed")),
+    }
+
+
+def _conv1d(x, w, b):
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * cast(w)[i][None, None, :] for i in range(width)
+    )
+    return out + cast(b)
+
+
+def _gates(xw, p):
+    r = jax.nn.sigmoid(xw @ cast(p["w_r"]))
+    i = jax.nn.sigmoid(xw @ cast(p["w_i"]))
+    log_a = (
+        -_C
+        * jax.nn.softplus(p["lam"].astype(jnp.float32))[None, None, :]
+        * r.astype(jnp.float32)
+    )
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (
+        i.astype(jnp.float32) * xw.astype(jnp.float32)
+    )
+    return a, gated
+
+
+def rglru_block(x: jnp.ndarray, p: dict, cfg: ModelConfig, return_cache: bool = False):
+    """x: (B, S, d) -> (B, S, d).  Associative scan over time."""
+    gate = jax.nn.gelu(x @ cast(p["in_gate"]), approximate=True)
+    xw_raw = x @ cast(p["in_x"])
+    xw = _conv1d(xw_raw, p["conv_w"], p["conv_b"])
+    xw = sharding.constrain(xw, "batch", "seq", "mlp")
+
+    a, gated = _gates(xw, p)
+
+    def assoc(l, r):
+        al, hl = l
+        ar, hr = r
+        return al * ar, hr + ar * hl
+
+    _, h = jax.lax.associative_scan(assoc, (a, gated), axis=1)
+    out = (h.astype(x.dtype) * gate) @ cast(p["out"])
+    if return_cache:
+        cache = {"h": h[:, -1], "conv": xw_raw[:, -3:].astype(jnp.float32)}
+        return out, cache
+    return out
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, 3, w), dtype),
+    }
+
+
+def rglru_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig, cache: dict):
+    """x: (B, 1, d) -> (y, cache')."""
+    gate = jax.nn.gelu(x @ cast(p["in_gate"]), approximate=True)
+    xw_new = x @ cast(p["in_x"])  # (B,1,W)
+    win = jnp.concatenate([cache["conv"], xw_new.astype(cache["conv"].dtype)], 1)
+    w = cast(p["conv_w"])
+    xw = (jnp.einsum("bwc,wc->bc", win.astype(w.dtype), w) + cast(p["conv_b"]))[:, None, :]
+
+    a, gated = _gates(xw, p)
+    h = a[:, 0] * cache["h"] + gated[:, 0]  # (B, W)
+    y = h[:, None, :].astype(x.dtype) * gate
+    return y @ cast(p["out"]), {"h": h, "conv": win[:, 1:]}

@@ -1,0 +1,193 @@
+"""Mamba-2 SSD (state-space duality) block — chunked linear-time scan.
+
+Implements the SSD algorithm of Dao & Gu 2024 (arXiv:2405.21060): within
+chunks of length Q the recurrence is computed as a masked quadratic form
+(MXU-friendly), between chunks a tiny recurrent state (H, P, N_state) is
+carried by an associative scan — O(S * Q) work, O(S/Q) sequential depth.
+This is what makes the ``long_500k`` cell lowerable for mamba2-780m.
+
+Decode keeps the (B, H, P, N) state + a (B, W-1, conv_dim) conv tail and
+advances one token in O(1).
+
+Shapes follow the reference implementation:
+  d_inner = expand * d_model;  H = d_inner / headdim;  N = ssm_state
+  in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.models.layers import Leaf, cast, rmsnorm
+
+
+def ssd_schema(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    n, h = cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = di + 2 * n
+    return {
+        "in_proj": Leaf((d, 2 * di + 2 * n + h), ("embed", "mlp")),
+        "conv_w": Leaf((cfg.ssm_conv_width, conv_dim), (None, "mlp"), scale=0.5),
+        "conv_b": Leaf((conv_dim,), ("mlp",), init="zeros"),
+        "a_log": Leaf((h,), ("ssm_heads",), init="zeros"),
+        "dt_bias": Leaf((h,), ("ssm_heads",), init="zeros"),
+        "d_skip": Leaf((h,), ("ssm_heads",), init="ones"),
+        "norm": Leaf((di,), ("mlp",), init="zeros"),
+        "out_proj": Leaf((di, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z, x, b, c, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], -1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv; x: (B, S, C), w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * cast(w)[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out + cast(b))
+
+
+def ssd_scan(xh, dt, a, bmat, cmat, chunk: int):
+    """Chunked SSD.  xh: (B,S,H,P); dt: (B,S,H) >=0; a: (H,) <0 decay rates;
+    bmat/cmat: (B,S,N).  Returns (B,S,H,P) and final state (B,H,P,N)."""
+    bsz, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+
+    # log-decay per step: dA = dt * a   (negative)
+    da = dt * a[None, None, :]  # (B,S,H)
+    da_c = da.reshape(bsz, nc, q, h)
+    xs = (xh * dt[..., None]).reshape(bsz, nc, q, h, p)  # dt-weighted input
+    bs = bmat.reshape(bsz, nc, q, n)
+    cs = cmat.reshape(bsz, nc, q, n)
+
+    cum = jnp.cumsum(da_c, axis=2)  # (B,nc,q,H) inclusive
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,q_i,q_j,H)
+    iota = jnp.arange(q)
+    causal = (iota[:, None] >= iota[None, :])[None, None, :, :, None]
+    # Mask the EXPONENT (not the exp) — exp of a large positive non-causal
+    # entry would be inf and poison the backward pass via where's 0 * inf.
+    seg = jnp.where(causal, seg, -1e9)
+    decay_ij = jnp.exp(seg)  # (B,nc,i,j,H)
+
+    # Intra-chunk: Y_intra[i] = sum_j<=i C_i.B_j decay(i,j) X_j
+    cb = jnp.einsum("bnim,bnjm->bnij", cs, bs, preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum(
+        "bnij,bnijh,bnjhp->bnihp", cb, decay_ij, xs, preferred_element_type=jnp.float32
+    )
+
+    # Chunk summary states: S_n = sum_j decay(end, j) B_j^T X_j  -> (B,nc,H,P,N)
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,q,H)
+    s_chunk = jnp.einsum(
+        "bnjm,bnjh,bnjhp->bnhpm", bs, decay_end, xs, preferred_element_type=jnp.float32
+    )
+
+    # Inter-chunk recurrence over nc: S_{n} = exp(sum da_n) S_{n-1} + s_chunk_n
+    chunk_decay = jnp.exp(jnp.sum(da_c, axis=2))  # (B,nc,H)
+
+    def assoc(eL, eR):
+        aL, sL = eL
+        aR, sR = eR
+        return aL * aR, sR + aR[..., None, None] * sL
+
+    a_acc, s_acc = jax.lax.associative_scan(
+        assoc, (chunk_decay, s_chunk), axis=1
+    )  # inclusive: state at end of each chunk
+    # State entering chunk n = exclusive scan.
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_acc[:, :1]), s_acc[:, :-1]], axis=1
+    )  # (B,nc,H,P,N)
+
+    # Inter-chunk output: Y_inter[i] = C_i decay(i,start) S_prev
+    decay_in = jnp.exp(cum)  # decay from chunk start to i (inclusive of i)
+    y_inter = jnp.einsum(
+        "bnim,bnih,bnhpm->bnihp", cs, decay_in, s_prev, preferred_element_type=jnp.float32
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, s_acc[:, -1]  # final state (B,H,P,N)
+
+
+def ssd_block(x: jnp.ndarray, p: dict, cfg: ModelConfig, return_cache: bool = False):
+    """Full Mamba-2 block: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    hd = cfg.ssm_headdim
+    zxbcdt = x @ cast(p["in_proj"])
+    z, xr, b, c, dt = _split_proj(zxbcdt, cfg)
+    xbc_raw = jnp.concatenate([xr, b, c], -1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xr, b, c = jnp.split(xbc, [di, di + n], -1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) negative rates
+    xh = xr.reshape(*xr.shape[:2], h, hd).astype(jnp.float32)
+    xh = sharding.constrain(xh, "batch", "seq", "ssm_heads", None)
+
+    y, final_state = ssd_scan(
+        xh, dt, a, b.astype(jnp.float32), c.astype(jnp.float32), cfg.ssm_chunk
+    )
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])  # gated RMSNorm (mamba2)
+    out = y @ cast(p["out_proj"])
+    if return_cache:
+        w = cfg.ssm_conv_width
+        cache = {
+            "state": final_state,
+            "conv": xbc_raw[:, -(w - 1):].astype(jnp.float32),
+        }
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) per token)
+# ---------------------------------------------------------------------------
+
+
+def ssd_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    conv_dim = di + 2 * n
+    return {
+        "state": jnp.zeros((batch, h, hd, n), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssd_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig, cache: dict):
+    """x: (B, 1, d) -> (y, cache')."""
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = x @ cast(p["in_proj"])
+    z, xr, b, c, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([xr, b, c], -1)  # (B,1,conv_dim)
+
+    win = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)], 1)
+    w = cast(p["conv_w"])
+    conv_out = jnp.einsum("bwc,wc->bc", win.astype(w.dtype), w) + cast(p["conv_b"])
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    xr, b, c = jnp.split(xbc1, [di, di + n], -1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a[None, :])  # (B,H)
+    xh = xr[:, 0].reshape(-1, h, hd).astype(jnp.float32)
+    bx = jnp.einsum("bhp,bm->bhpm", xh * dt[..., None], b[:, 0].astype(jnp.float32))
+    state = cache["state"] * da[:, :, None, None] + bx
+    y = jnp.einsum("bhpm,bm->bhp", state, c[:, 0].astype(jnp.float32))
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = y @ cast(p["out_proj"])
+    return out, {"state": state, "conv": win[:, 1:]}

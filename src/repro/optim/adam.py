@@ -1,0 +1,69 @@
+"""AdamW from scratch (no optax in this container) + ZeRO-1 spec helper."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray  # () int32
+    m: dict  # first-moment pytree (f32, ZeRO-1 sharded)
+    v: dict  # second-moment pytree
+
+
+def init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def update(
+    grads, state: AdamState, params, cfg: TrainConfig, lr_scale: jnp.ndarray | float = 1.0
+):
+    """AdamW step; returns (new_params, new_state).  Global-norm clipping."""
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    step = state.step + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.learning_rate * lr_scale
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m2 / bc1
+        vh = v2 / bc2
+        p2 = p.astype(jnp.float32) - lr * (
+            mh / (jnp.sqrt(vh) + 1e-8) + cfg.weight_decay * p.astype(jnp.float32)
+        )
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamState(step=step, m=new_m, v=new_v), gnorm
+
+
+def zero1_axes(axes: tuple, shape: tuple, data_divisor: int) -> tuple:
+    """ZeRO-1: extend a param's logical axes for its optimizer moments by
+    sharding the first replicated-and-divisible dim over the data axis.
+
+    E.g. a TP-sharded (d, ff) weight with axes ('embed', 'mlp') -> moments
+    axes ('zero1', 'mlp'), halving optimizer-state HBM per data shard.
+    """
+    out = list(axes)
+    for i, (ax, dim) in enumerate(zip(axes, shape)):
+        if ax in (None, "embed", "head_dim", "expert_cap") and dim % data_divisor == 0 and dim >= data_divisor:
+            out[i] = "zero1"
+            break
+    return tuple(out)

@@ -1,0 +1,35 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+Checkpoints store full logical arrays (runtime/checkpoint.py), so rescaling
+from N to M devices is a restore with new NamedShardings — no resharding
+pass over the bytes is needed.  ``reshard_tree`` also supports live
+mesh-to-mesh moves (shrink on failure, grow on capacity).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed import sharding as shd
+from repro.models import layers as layers_lib
+
+
+def shardings_for_schema(schema, mesh: Mesh):
+    """NamedSharding pytree for a param schema under `mesh`."""
+    with shd.activate(mesh):
+        specs = layers_lib.param_specs(schema)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def reshard_tree(tree, mesh: Mesh, specs):
+    """Move a live pytree onto `mesh` with PartitionSpecs `specs`."""
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), tree, specs
+    )
+
+
+def rescale(manager, schema, new_mesh: Mesh, step=None):
+    """Restore the latest checkpoint onto a different-size mesh."""
+    shards = shardings_for_schema(schema, new_mesh)
+    return manager.restore(step=step, shardings=shards)

@@ -1,0 +1,66 @@
+"""Drift detector unit tests (paper Alg. 1 line 3 / mode switching)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import drift
+
+
+def _run_scores(scores, cfg):
+    st = drift.init_state()
+    states = []
+    for s in scores:
+        st = drift.update(st, jnp.asarray(s, jnp.float32), cfg)
+        states.append(st)
+    return states
+
+
+def test_no_drift_on_stationary_stream():
+    rng = np.random.default_rng(0)
+    cfg = drift.DriftConfig(warmup=32, k_sigma=4.0)
+    states = _run_scores(rng.normal(1.0, 0.05, 500), cfg)
+    assert not any(bool(s.active) for s in states)
+
+
+def test_detects_sudden_shift_and_recovers():
+    rng = np.random.default_rng(1)
+    cfg = drift.DriftConfig(warmup=32, k_sigma=3.0, enter_hits=2, exit_calm=16)
+    calm = rng.normal(1.0, 0.05, 200)
+    shifted = rng.normal(3.0, 0.05, 40)  # sudden drift
+    back = rng.normal(1.0, 0.05, 200)
+    states = _run_scores(np.concatenate([calm, shifted, back]), cfg)
+    active = [bool(s.active) for s in states]
+    assert not any(active[:200])
+    assert any(active[200:240])  # IsDrift fires
+    assert not active[-1]  # IsTrainDone: returns to predicting mode
+
+
+def test_warmup_suppresses_detection():
+    cfg = drift.DriftConfig(warmup=64, k_sigma=3.0, enter_hits=1)
+    scores = [1.0] * 10 + [100.0] * 5  # huge outlier inside warmup
+    states = _run_scores(scores, cfg)
+    assert not any(bool(s.active) for s in states)
+
+
+def test_score_combines_features_and_confidence():
+    cfg = drift.DriftConfig()
+    x = jnp.ones((8,))
+    conf_hi = jnp.asarray([0.0, 1.0, 0.0])
+    conf_lo = jnp.asarray([0.4, 0.5, 0.45])
+    s_hi = float(drift.score(x, conf_hi, cfg))
+    s_lo = float(drift.score(x, conf_lo, cfg))
+    assert s_lo > s_hi  # low confidence -> higher drift score
+
+
+def test_fleet_update_is_per_stream():
+    # enter_hits=2 + k_sigma=4: a lone 3-sigma fluctuation in the calm
+    # stream must not trip the detector.
+    cfg = drift.DriftConfig(warmup=4, k_sigma=4.0, enter_hits=2)
+    fleet = drift.init_fleet(2)
+    rng = np.random.default_rng(2)
+    for i in range(50):
+        s0 = rng.normal(1.0, 0.01)
+        s1 = rng.normal(1.0, 0.01) if i < 30 else 50.0  # stream 1 drifts
+        fleet = drift.fleet_update(fleet, jnp.asarray([s0, s1], jnp.float32), cfg)
+    assert not bool(fleet.active[0])
+    assert bool(fleet.active[1])

@@ -1,0 +1,75 @@
+"""HAR surrogate dataset properties (paper §3 protocol invariants)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import har
+
+
+@pytest.fixture(scope="module")
+def splits():
+    return har.generate(seed=0)
+
+
+def test_shapes_and_ranges(splits):
+    for x in (splits.train_x, splits.test0_x, splits.test1_x):
+        assert x.shape[1] == har.N_FEATURES == 561
+        assert np.abs(x).max() <= 1.0  # tanh-bounded like the real dataset
+    for y in (splits.train_y, splits.test0_y, splits.test1_y):
+        assert set(np.unique(y)) <= set(range(6))
+
+
+def test_drift_split_is_disjoint_and_exact(splits):
+    """test1 = exactly the 5 held-out subjects' samples (paper protocol)."""
+    n_total = 30 * 6 * 56
+    assert len(splits.train_x) + len(splits.test0_x) + len(splits.test1_x) == n_total
+    assert len(splits.test1_x) == 5 * 6 * 56  # subjects {9,14,16,19,25}
+
+
+def test_all_classes_present_in_every_split(splits):
+    for y in (splits.train_y, splits.test0_y, splits.test1_y):
+        assert len(np.unique(y)) == 6
+
+
+def test_generation_deterministic():
+    a = har.generate(seed=3)
+    b = har.generate(seed=3)
+    np.testing.assert_array_equal(a.train_x, b.train_x)
+    np.testing.assert_array_equal(a.test1_y, b.test1_y)
+
+
+def test_odl_split_stream_has_bouts(splits):
+    """The retraining stream must be temporally coherent (activity bouts) —
+    the property that makes auto-theta streaks attainable (DESIGN.md §5)."""
+    ox, oy, tx, ty = har.odl_split(splits, 0.6, seed=0, bout_len=70)
+    runs = np.diff(oy) != 0
+    n_runs = 1 + int(runs.sum())
+    avg_run = len(oy) / n_runs
+    assert avg_run > 20  # bouts, not i.i.d. shuffle (expected ~70)
+    # Split sizes: 60/40.
+    assert abs(len(ox) - 0.6 * len(splits.test1_x)) < 2
+    assert len(ox) + len(tx) == len(splits.test1_x)
+
+
+def test_odl_split_partition_is_exact(splits):
+    """Stream + holdout partition test1 exactly (no leakage)."""
+    ox, oy, tx, ty = har.odl_split(splits, 0.6, seed=1)
+    joined = np.concatenate([ox, tx])
+    assert joined.shape == splits.test1_x.shape
+    # Same multiset of rows (sort by a hash of each row).
+    h1 = np.sort((joined * 1000).sum(axis=1))
+    h2 = np.sort((splits.test1_x * 1000).sum(axis=1))
+    np.testing.assert_allclose(h1, h2, atol=1e-3)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_drifted_subjects_are_out_of_distribution(seed):
+    """Property: held-out subjects sit measurably farther from the train
+    centroid than in-distribution test0 (the drift is real)."""
+    s = har.generate(seed=seed)
+    mu = s.train_x.mean(axis=0)
+    d0 = np.linalg.norm(s.test0_x - mu, axis=1).mean()
+    d1 = np.linalg.norm(s.test1_x - mu, axis=1).mean()
+    assert d1 > d0 * 1.02

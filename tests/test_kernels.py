@@ -1,0 +1,149 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Sweeps shapes (aligned + ragged) and dtypes per the repo convention: every
+kernel asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.oselm_update import oselm_rls_update
+from repro.kernels.xorshift_proj import xorshift_projection
+
+
+# ---------------------------------------------------------------------------
+# xorshift_projection
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,n_in,n_hidden",
+    [
+        (8, 128, 128),  # exactly one tile
+        (8, 256, 384),  # multi-tile K and N
+        (3, 561, 128),  # the paper's HAR shape (ragged K, ragged B)
+        (130, 100, 72),  # everything ragged
+        (1, 16, 16),  # tiny
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_xorshift_projection_matches_ref(b, n_in, n_hidden, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(b * 7 + n_in), (b, n_in)).astype(dtype)
+    got = xorshift_projection(x, seed=0x2D2A, n_hidden=n_hidden, interpret=True)
+    want = ref.xorshift_projection_ref(x, 0x2D2A, n_hidden)
+    np.testing.assert_allclose(got, want, atol=2e-3 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("activation", ["sigmoid", "relu", "identity"])
+def test_xorshift_projection_activations(activation):
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 96))
+    got = xorshift_projection(x, 7, 64, activation=activation, interpret=True)
+    want = ref.xorshift_projection_ref(x, 7, 64, activation=activation)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_xorshift_projection_tile_independence():
+    """Different tile sizes must give bit-identical alpha (counter-based)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 200))
+    a = xorshift_projection(x, 3, 160, tb=8, tn=32, tk=64, interpret=True)
+    b = xorshift_projection(x, 3, 160, tb=16, tn=128, tk=128, interpret=True)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_xorshift_projection_scale():
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 64))
+    got = xorshift_projection(x, 11, 32, scale=0.5, interpret=True)
+    want = ref.xorshift_projection_ref(x, 11, 32, scale=0.5)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_ops_wrapper_handles_leading_dims():
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 5, 48))
+    got = ops.xorshift_projection(x, 5, 32)
+    want = ref.xorshift_projection_ref(x, 5, 32)
+    assert got.shape == (2, 5, 32)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# oselm_rls_update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,k,m",
+    [
+        (128, 1, 6),  # paper serving shape: rank-1, HAR head
+        (128, 8, 6),  # rank-k batch
+        (256, 32, 6),
+        (200, 4, 10),  # ragged N
+        (64, 64, 3),  # k == tile
+    ],
+)
+def test_oselm_rls_update_matches_ref(n, k, m):
+    key = jax.random.PRNGKey(n + k)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Build a genuine SPD P (inverse Gram of random features + ridge).
+    f = jax.random.normal(k1, (3 * n, n)) / np.sqrt(n)
+    P = jnp.linalg.inv(f.T @ f + 0.1 * jnp.eye(n))
+    beta = jax.random.normal(k2, (n, m)) * 0.1
+    H = jax.nn.sigmoid(jax.random.normal(k3, (k, n)))
+    Y = jax.nn.one_hot(jax.random.randint(key, (k,), 0, m), m)
+
+    p_got, b_got = oselm_rls_update(P, beta, H, Y, interpret=True)
+    p_want, b_want = ref.oselm_rls_update_ref(P, beta, H, Y)
+    np.testing.assert_allclose(p_got, p_want, atol=2e-5)
+    np.testing.assert_allclose(b_got, b_want, atol=2e-4)
+
+
+def test_oselm_rls_update_tile_sweep():
+    """Tile size must not change the result."""
+    n, k, m = 96, 4, 6
+    key = jax.random.PRNGKey(9)
+    f = jax.random.normal(key, (2 * n, n)) / np.sqrt(n)
+    P = jnp.linalg.inv(f.T @ f + 0.1 * jnp.eye(n))
+    beta = jnp.zeros((n, m))
+    H = jax.nn.sigmoid(jax.random.normal(key, (k, n)))
+    Y = jax.nn.one_hot(jnp.arange(k) % m, m)
+    outs = [
+        oselm_rls_update(P, beta, H, Y, tn=tn, interpret=True) for tn in (32, 48, 128)
+    ]
+    for p2, b2 in outs[1:]:
+        np.testing.assert_allclose(outs[0][0], p2, atol=1e-5)
+        np.testing.assert_allclose(outs[0][1], b2, atol=1e-5)
+
+
+def test_kernel_path_equals_oselm_module():
+    """oselm.sequential_update(use_kernel=True) == pure-jnp module path."""
+    from repro.core import oselm
+
+    cfg = oselm.OSELMConfig(n_in=48, n_hidden=64, n_out=5, variant="hash", seed=3)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 48))
+    y = jax.nn.one_hot(jnp.arange(8) % 5, 5)
+    st0 = oselm.init_state(cfg)
+    st_jnp = oselm.sequential_update(st0, x, y, cfg)
+    st_krn = oselm.sequential_update(st0, x, y, cfg, use_kernel=True)
+    # P starts at I/ridge = 100*I: values ~1e2 with heavy cancellation, so
+    # compare relatively (f32 accumulation order differs between paths).
+    np.testing.assert_allclose(st_krn.P, st_jnp.P, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(st_krn.beta, st_jnp.beta, rtol=2e-3, atol=2e-3)
+
+
+def test_fused_head_composition():
+    """Projection kernel + RLS kernel == fused oracle."""
+    n_in, n, m, k = 100, 64, 6, 4
+    x = jax.random.normal(jax.random.PRNGKey(1), (k, n_in))
+    f = jax.random.normal(jax.random.PRNGKey(2), (2 * n, n)) / np.sqrt(n)
+    P = jnp.linalg.inv(f.T @ f + 0.1 * jnp.eye(n))
+    beta = jnp.zeros((n, m))
+    Y = jax.nn.one_hot(jnp.arange(k) % m, m)
+
+    h = xorshift_projection(x, 5, n, interpret=True)
+    p_got, b_got = oselm_rls_update(P, beta, h, Y, interpret=True)
+    h_want, p_want, b_want = ref.fused_elm_head_ref(x, P, beta, Y, 5)
+    np.testing.assert_allclose(h, h_want, atol=1e-5)
+    np.testing.assert_allclose(p_got, p_want, atol=2e-5)
+    np.testing.assert_allclose(b_got, b_want, atol=2e-4)

@@ -1,0 +1,184 @@
+"""Multi-device tests, run in SUBPROCESSES with XLA_FLAGS forcing 8 host
+devices (jax locks device count at first init, and the main test process
+must keep seeing 1 device — see dry-run rule 0)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ENV = dict(
+    os.environ,
+    XLA_FLAGS="--xla_force_host_platform_device_count=8",
+    PYTHONPATH="src",
+    JAX_PLATFORMS="cpu",
+)
+
+
+def _run(code: str, timeout=600):
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=ENV,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    """pjit train_step on a 2x4 mesh == single-device train_step."""
+    _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import configs
+        from repro.configs.base import TrainConfig
+        from repro.distributed import sharding
+        from repro.launch.mesh import make_dev_mesh
+        from repro.models import model as M
+
+        cfg = configs.get_config('qwen3-4b', 'smoke')
+        tcfg = TrainConfig(remat=False)
+        key = jax.random.PRNGKey(0)
+        state = M.init_train_state(cfg, key)
+        batch = {
+            'tokens': jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+            'labels': jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+            'odl_labels': jax.random.randint(key, (8,), 0, cfg.odl.n_out),
+        }
+        # Single device reference.
+        st1, m1 = jax.jit(lambda s, b: M.train_step(s, b, cfg, tcfg))(state, batch)
+
+        mesh = make_dev_mesh(2, 4)
+        with sharding.activate(mesh):
+            st2, m2 = jax.jit(lambda s, b: M.train_step(s, b, cfg, tcfg))(state, batch)
+        np.testing.assert_allclose(float(m1['loss']), float(m2['loss']), rtol=2e-2)
+        a = np.asarray(st1.params['layers']['mlp']['wd'], np.float32)
+        b = np.asarray(st2.params['layers']['mlp']['wd'], np.float32)
+        np.testing.assert_allclose(a, b, atol=3e-2, rtol=3e-2)
+        print('OK')
+        """
+    )
+
+
+def test_moe_expert_parallel_runs_sharded():
+    """MoE block under EP sharding compiles+runs and matches unsharded."""
+    _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import configs
+        from repro.distributed import sharding
+        from repro.launch.mesh import make_dev_mesh
+        from repro.models import model as M
+        from repro.models.transformer import lm_hidden
+
+        cfg = configs.get_config('deepseek-moe-16b', 'smoke')
+        params = M.layers.init_params(M.build_schema(cfg), jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)
+        h1, _ = jax.jit(lambda p, t: lm_hidden(p, t, cfg, remat=False))(params, toks)
+        mesh = make_dev_mesh(2, 4)
+        with sharding.activate(mesh):
+            h2, _ = jax.jit(lambda p, t: lm_hidden(p, t, cfg, remat=False))(params, toks)
+        # Top-k routing is a discrete boundary: reduction-order noise can flip
+        # near-tie expert choices for a few tokens under sharding, so compare
+        # robustly (fraction-close) rather than elementwise-exact.
+        d = np.abs(np.asarray(h1, np.float32) - np.asarray(h2, np.float32))
+        assert (d < 0.1).mean() > 0.90, f'too many mismatches: {(d >= 0.1).mean():.3f}'
+        assert np.median(d) < 0.02  # bulk agrees to bf16 noise
+        print('OK')
+        """
+    )
+
+
+def test_pipeline_matches_sequential():
+    """GPipe stage scan == sequential stage application."""
+    _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed import pipeline
+
+        mesh = jax.make_mesh((8,), ('stage',),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        n_stages, m, b, d = 8, 4, 2, 16
+        key = jax.random.PRNGKey(0)
+        h = jax.random.normal(key, (m, b, d))
+        w = jax.random.normal(jax.random.PRNGKey(1), (n_stages, d, d)) / np.sqrt(d)
+        params = {'w': w}
+
+        def stage_fn(x, p):
+            return jnp.tanh(x @ p['w'])
+
+        got = pipeline.pipeline_forward(h, params, stage_fn, mesh)
+        want = pipeline.sequential_reference(h, params, stage_fn, n_stages)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+        assert pipeline.bubble_fraction(8, 4) == 7/11
+        print('OK')
+        """
+    )
+
+
+def test_elastic_reshard_checkpoint():
+    """Save params on a 4x2 mesh, restore onto 2x2 (elastic rescale)."""
+    _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from repro import configs
+        from repro.distributed import sharding
+        from repro.launch.mesh import make_dev_mesh
+        from repro.models import model as M, layers
+        from repro.runtime.checkpoint import CheckpointManager
+        from repro.runtime import elastic
+
+        cfg = configs.get_config('qwen3-4b', 'smoke')
+        schema = M.build_schema(cfg)
+        mesh_a = make_dev_mesh(4, 2)
+        with sharding.activate(mesh_a):
+            params = layers.init_params(schema, jax.random.PRNGKey(0))
+            params = elastic.reshard_tree(params, mesh_a, layers.param_specs(schema))
+
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=1)
+            mgr.save(1, params)
+            mesh_b = make_dev_mesh(2, 2)  # "half the fleet died"
+            step, restored = elastic.rescale(mgr, schema, mesh_b)
+            assert step == 1
+            for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+            # Restored arrays really live on the new mesh.
+            leaf = jax.tree.leaves(restored)[0]
+            assert leaf.sharding.mesh.shape == {'data': 2, 'model': 2}
+        print('OK')
+        """
+    )
+
+
+def test_odl_fleet_shards_over_data_axis():
+    """The paper's fleet of (beta, P) heads shards across the data axis."""
+    _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import oselm
+        from repro.distributed import sharding
+        from repro.launch.mesh import make_dev_mesh
+
+        cfg = oselm.OSELMConfig(n_in=32, n_hidden=16, n_out=4, variant='hash')
+        mesh = make_dev_mesh(4, 2)
+        fleet = oselm.init_fleet(cfg, 8)
+        with sharding.activate(mesh):
+            fleet = jax.tree.map(
+                lambda a: jax.device_put(a, NamedSharding(mesh, P('data'))), fleet)
+            x = jax.device_put(
+                jax.random.normal(jax.random.PRNGKey(0), (8, 32)),
+                NamedSharding(mesh, P('data')))
+            y = jax.nn.one_hot(jnp.arange(8) % 4, 4)
+            f2 = jax.jit(lambda f, xx, yy: oselm.fleet_update(f, xx, yy, cfg))(fleet, x, y)
+        assert f2.P.shape == (8, 16, 16)
+        assert 'data' in str(jax.tree.leaves(f2)[0].sharding.spec)
+        print('OK')
+        """
+    )

@@ -1,0 +1,134 @@
+"""Integration tests: the paper's system loop end-to-end (Algorithm 1, §3)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import drift as drift_mod
+from repro.core import odl_head, oselm, pruning
+from repro.data import har
+
+
+@pytest.fixture(scope="module")
+def har_data():
+    return har.generate(seed=0)
+
+
+def _boot_core(har_data, run_seed=0, theta="auto", N=128):
+    elm_cfg = oselm.OSELMConfig(
+        n_in=561, n_hidden=N, n_out=6, variant="hash", seed=run_seed + 77, ridge=1e-2
+    )
+    if theta == "auto":
+        pcfg = pruning.PruneConfig(min_trained=max(N, 288))
+    else:
+        pcfg = pruning.PruneConfig(ladder=(theta,), min_trained=max(N, 288))
+    cfg = odl_head.ODLCoreConfig(elm=elm_cfg, prune=pcfg)
+    st0 = oselm.init_state_batch(
+        elm_cfg, jnp.asarray(har_data.train_x), jax.nn.one_hot(har_data.train_y, 6)
+    )
+    return cfg, odl_head.init_state(cfg)._replace(elm=st0)
+
+
+def test_odl_recovers_accuracy_after_drift(har_data):
+    """Paper Table 3's headline: NoODL drops ~10 pts after drift; ODL recovers."""
+    cfg, core = _boot_core(har_data, theta=1.0)
+    ox, oy, tx, ty = har.odl_split(har_data, 0.6, 0)
+
+    acc_before_drift = float(
+        odl_head.accuracy(core, jnp.asarray(har_data.test0_x), jnp.asarray(har_data.test0_y), cfg)
+    )
+    acc_noodl = float(odl_head.accuracy(core, jnp.asarray(tx), jnp.asarray(ty), cfg))
+
+    core, _ = jax.jit(functools.partial(odl_head.run_training_phase, cfg=cfg))(
+        core, jnp.asarray(ox), jnp.asarray(oy)
+    )
+    acc_odl = float(odl_head.accuracy(core, jnp.asarray(tx), jnp.asarray(ty), cfg))
+
+    assert acc_before_drift > 0.90  # paper: 93.1 +- 0.8
+    assert acc_noodl < acc_before_drift - 0.05  # the drift hurts (paper: -10.2)
+    assert acc_odl > acc_noodl + 0.025  # ODL recovers (paper: +7.8)
+
+
+def test_auto_pruning_cuts_communication_with_small_accuracy_loss(har_data):
+    """Paper Fig. 3 'Auto': large comm reduction, <= ~1% accuracy delta."""
+    ox, oy, tx, ty = har.odl_split(har_data, 0.6, 0)
+
+    cfg_full, core_full = _boot_core(har_data, theta=1.0)
+    core_full, _ = jax.jit(functools.partial(odl_head.run_training_phase, cfg=cfg_full))(
+        core_full, jnp.asarray(ox), jnp.asarray(oy)
+    )
+    acc_full = float(odl_head.accuracy(core_full, jnp.asarray(tx), jnp.asarray(ty), cfg_full))
+    comm_full = float(pruning.comm_volume_fraction(core_full.prune))
+
+    cfg_auto, core_auto = _boot_core(har_data, theta="auto")
+    core_auto, _ = jax.jit(functools.partial(odl_head.run_training_phase, cfg=cfg_auto))(
+        core_auto, jnp.asarray(ox), jnp.asarray(oy)
+    )
+    acc_auto = float(odl_head.accuracy(core_auto, jnp.asarray(tx), jnp.asarray(ty), cfg_auto))
+    comm_auto = float(pruning.comm_volume_fraction(core_auto.prune))
+
+    assert comm_full == 1.0
+    assert comm_auto < 0.70  # paper: 0.443; surrogate lands ~0.5
+    assert acc_auto > acc_full - 0.02  # paper: -0.9% worst case
+
+
+def test_comm_volume_monotone_in_theta(har_data):
+    """Fig. 3's line graph: lower theta => less communication."""
+    ox, oy, _, _ = har.odl_split(har_data, 0.6, 0)
+    comms = []
+    for theta in (1.0, 0.32, 0.08):
+        cfg, core = _boot_core(har_data, theta=theta)
+        core, _ = jax.jit(functools.partial(odl_head.run_training_phase, cfg=cfg))(
+            core, jnp.asarray(ox), jnp.asarray(oy)
+        )
+        comms.append(float(pruning.comm_volume_fraction(core.prune)))
+    assert comms[0] > comms[1] > comms[2]
+
+
+def test_comm_meter_counts_bytes(har_data):
+    ox, oy, _, _ = har.odl_split(har_data, 0.6, 0)
+    cfg, core = _boot_core(har_data, theta=1.0)
+    core, outs = jax.jit(functools.partial(odl_head.run_training_phase, cfg=cfg))(
+        core, jnp.asarray(ox[:50]), jnp.asarray(oy[:50])
+    )
+    assert float(core.meter.up_bytes) == 50 * 561 * 4
+    assert float(core.meter.down_bytes) == 50 * 1
+
+
+def test_teacher_outage_skips_training(har_data):
+    """Paper: 'queries will be retried later or skipped' — an unavailable
+    teacher must not corrupt the model (no training on garbage labels)."""
+    ox, oy, _, _ = har.odl_split(har_data, 0.6, 0)
+    cfg, core = _boot_core(har_data, theta=1.0)
+    avail = jnp.zeros(20, jnp.bool_)  # total outage
+    core2, outs = jax.jit(functools.partial(odl_head.run_training_phase, cfg=cfg))(
+        core, jnp.asarray(ox[:20]), jnp.asarray(oy[:20]), teacher_available=avail
+    )
+    np.testing.assert_allclose(core2.elm.beta, core.elm.beta, atol=1e-6)
+    assert not bool(jnp.any(outs.queried))
+    assert float(core2.meter.total) == 0.0
+
+
+def test_full_algorithm1_detects_drift_and_enters_training(har_data):
+    """Run the full Algorithm-1 loop over a stream that shifts distribution
+    mid-way; the detector must enter training mode and query labels."""
+    cfg, core = _boot_core(har_data, theta="auto")
+    dcfg = drift_mod.DriftConfig(warmup=32, k_sigma=3.0, enter_hits=2)
+    cfg = odl_head.ODLCoreConfig(elm=cfg.elm, prune=cfg.prune, drift=dcfg)
+
+    calm = har_data.test0_x[:300]
+    # Strong synthetic shift: scaled + offset features (the recalibrated
+    # surrogate has small feature magnitudes, so the shift is scaled up).
+    shifted = np.clip(har_data.test1_x[:300] * 4.0 + 2.0, -3, 3)
+    xs = jnp.asarray(np.concatenate([calm, shifted]))
+    ys = jnp.asarray(
+        np.concatenate([har_data.test0_y[:300], har_data.test1_y[:300]]).astype(np.int32)
+    )
+    core, outs = jax.jit(functools.partial(odl_head.run_stream, cfg=cfg))(core, xs, ys)
+    training = np.asarray(outs.mode_training)
+    assert not training[:200].any()  # calm segment: stays predicting
+    assert training[320:].any()  # shift detected -> training mode
+    assert np.asarray(outs.queried)[320:].sum() > 0  # labels were acquired

@@ -1,0 +1,142 @@
+"""P1P2 auto data pruning tests (paper §2.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pruning
+
+
+def _state(level=0, streak=0):
+    s = pruning.init_state()
+    return s._replace(
+        level=jnp.asarray(level, jnp.int32), streak=jnp.asarray(streak, jnp.int32)
+    )
+
+
+CFG = pruning.PruneConfig(min_trained=10)
+T = jnp.asarray(True)
+F = jnp.asarray(False)
+
+
+def test_confidence_is_top2_gap_clamped():
+    o = jnp.asarray([0.1, 0.8, 0.05, 0.02, 0.02, 0.01])
+    assert np.isclose(float(pruning.confidence(o)), 0.7)
+    o2 = jnp.asarray([2.0, -1.0, 0.0])  # regression outputs can exceed [0,1]
+    assert float(pruning.confidence(o2)) == 1.0
+
+
+def test_theta_ladder_walk():
+    st_ = _state(level=0)
+    assert float(pruning.theta_of(st_, CFG)) == 1.0
+    st_ = _state(level=4)
+    assert np.isclose(float(pruning.theta_of(st_, CFG)), 0.08)
+
+
+def test_should_query_conditions():
+    """All three paper conditions must hold to prune."""
+    st_ = _state(level=4)  # theta = 0.08
+    conf_hi = jnp.asarray([0.0, 0.9, 0.0])
+
+    # high conf + warm + no drift -> prune (no query)
+    assert not bool(pruning.should_query(st_, conf_hi, jnp.asarray(100), F, CFG))
+    # cold -> query
+    assert bool(pruning.should_query(st_, conf_hi, jnp.asarray(3), F, CFG))
+    # drift active -> query
+    assert bool(pruning.should_query(st_, conf_hi, jnp.asarray(100), T, CFG))
+    # low confidence -> query
+    conf_lo = jnp.asarray([0.5, 0.45, 0.0])
+    assert bool(pruning.should_query(st_, conf_lo, jnp.asarray(100), F, CFG))
+
+
+def test_theta_decreases_after_x_consecutive_successes():
+    cfg = pruning.PruneConfig(min_trained=0, x_consec=3)
+    st_ = _state(level=1)  # theta = 0.64
+    hi = jnp.asarray(0.9)
+    for _ in range(3):  # three skipped high-confidence samples
+        st_ = pruning.update(st_, F, F, hi, cfg)
+    assert int(st_.level) == 2  # theta stepped down 0.64 -> 0.32
+    assert int(st_.streak) == 0
+
+
+def test_theta_descends_from_startup_via_agreeing_queries():
+    """At theta = 1 (startup) conf > theta is impossible (clamped), so the
+    only way down is X consecutive agreeing queries — matching the paper's
+    'theta is set to a high value at the startup time' then relaxed."""
+    cfg = pruning.PruneConfig(min_trained=0, x_consec=3)
+    st_ = _state(level=0)
+    for _ in range(3):
+        st_ = pruning.update(st_, T, T, jnp.asarray(0.5), cfg)
+    assert int(st_.level) == 1
+
+
+def test_theta_increases_on_low_conf_disagreement():
+    cfg = pruning.PruneConfig(min_trained=0)
+    st_ = _state(level=3, streak=5)
+    st_ = pruning.update(st_, T, F, jnp.asarray(0.05), cfg)  # queried, c != t
+    assert int(st_.level) == 2  # up the ladder (more conservative)
+    assert int(st_.streak) == 0
+
+
+def test_forced_highconf_disagreement_does_not_raise_theta():
+    """Paper rule 3 applies only 'when querying (p1-p2 <= theta)': a forced
+    query (warm-up/drift) with HIGH confidence that disagrees is still a
+    clause-1 success."""
+    cfg = pruning.PruneConfig(min_trained=0)
+    st_ = _state(level=3)
+    st2 = pruning.update(st_, T, F, jnp.asarray(0.99), cfg)  # conf > 0.16
+    assert int(st2.level) == 3
+    assert int(st2.streak) == 1
+
+
+def test_agreement_on_query_counts_toward_streak():
+    cfg = pruning.PruneConfig(min_trained=0, x_consec=2)
+    st_ = _state(level=1)
+    st_ = pruning.update(st_, T, T, jnp.asarray(0.1), cfg)  # query agrees
+    st_ = pruning.update(st_, T, T, jnp.asarray(0.1), cfg)
+    assert int(st_.level) == 2
+
+
+def test_level_saturates_at_ladder_ends():
+    cfg = pruning.PruneConfig(min_trained=0, x_consec=1)
+    st_ = _state(level=4)
+    st_ = pruning.update(st_, F, F, jnp.asarray(0.99), cfg)
+    assert int(st_.level) == 4  # can't go below the floor
+    st_ = _state(level=0)
+    st_ = pruning.update(st_, T, F, jnp.asarray(0.0), cfg)
+    assert int(st_.level) == 0  # can't go above the start
+
+
+def test_comm_volume_fraction():
+    st_ = pruning.init_state()._replace(
+        queries=jnp.asarray(25, jnp.int32), skips=jnp.asarray(75, jnp.int32)
+    )
+    assert np.isclose(float(pruning.comm_volume_fraction(st_)), 0.25)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    level=st.integers(0, 4),
+    queried=st.booleans(),
+    agree=st.booleans(),
+    conf=st.floats(0.0, 1.0),
+)
+def test_update_invariants(level, queried, agree, conf):
+    """Property: level stays in range; counters are monotone; a step changes
+    level by at most 1."""
+    cfg = pruning.PruneConfig(min_trained=0)
+    st_ = _state(level=level, streak=cfg.x_consec - 1)
+    st2 = pruning.update(
+        st_, jnp.asarray(queried), jnp.asarray(agree), jnp.asarray(conf, jnp.float32), cfg
+    )
+    assert 0 <= int(st2.level) <= 4
+    assert abs(int(st2.level) - level) <= 1
+    assert int(st2.queries) + int(st2.skips) == int(st_.queries) + int(st_.skips) + 1
+
+
+def test_disabled_pruning_always_queries():
+    cfg = pruning.PruneConfig(min_trained=0, enabled=False)
+    st_ = _state(level=4)
+    assert bool(
+        pruning.should_query(st_, jnp.asarray([0.0, 1.0, 0.0]), jnp.asarray(10**6), F, cfg)
+    )

@@ -1,0 +1,85 @@
+"""Xorshift16 PRNG weight tests (paper §2.3, ODLHash)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import xorshift
+
+
+def test_stream_matches_bit_level_reference():
+    """Sequential generator vs an independent bit-level implementation."""
+
+    def ref_step(x):
+        x &= 0xFFFF
+        x ^= (x << 7) & 0xFFFF
+        x ^= x >> 9
+        x ^= (x << 8) & 0xFFFF
+        return x & 0xFFFF
+
+    s = 0x1234
+    expect = []
+    for _ in range(64):
+        s = ref_step(s)
+        expect.append(s)
+    got = xorshift.xorshift16_stream(0x1234, 64)
+    np.testing.assert_array_equal(got, np.asarray(expect, np.uint16))
+
+
+def test_stream_has_long_period():
+    """(7,9,8) is a full-period triple: no repeat within 65535 steps."""
+    seq = xorshift.xorshift16_stream(1, 65535)
+    assert len(np.unique(seq)) == 65535
+
+
+def test_step_jax_matches_numpy_stream():
+    seq = xorshift.xorshift16_stream(42, 100)
+    x = jnp.asarray(np.uint16(42))
+    got = []
+    for _ in range(100):
+        x = xorshift.xorshift16_step(x)
+        got.append(int(x))
+    np.testing.assert_array_equal(np.asarray(got, np.uint16), seq)
+
+
+def test_u16_to_unit_range():
+    xs = jnp.asarray(np.arange(0, 65536, 17, dtype=np.uint16))
+    u = xorshift.u16_to_unit(xs)
+    assert float(u.min()) >= -1.0 and float(u.max()) < 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**16 - 1),
+    ro=st.integers(0, 500),
+    co=st.integers(0, 500),
+)
+def test_alpha_hash_tiles_are_consistent(seed, ro, co):
+    """Counter-based generation: any tile equals the same slice of the full
+    matrix — the property the Pallas kernel relies on (DESIGN.md §2)."""
+    full = xorshift.alpha_hash(seed, 64, 640)
+    tile = np.asarray(
+        xorshift.alpha_hash(seed, 8, 640, row_offset=ro % 56, col_offset=co)
+    )
+    r, c = ro % 56, co
+    np.testing.assert_array_equal(tile[:, : 640 - c], np.asarray(full)[r : r + 8, c:])
+
+
+def test_alpha_hash_distribution_is_roughly_uniform():
+    a = np.asarray(xorshift.alpha_hash(7, 100, 128)).ravel()
+    assert abs(a.mean()) < 0.02
+    assert abs(a.std() - 1 / np.sqrt(3)) < 0.02  # U[-1,1) std = 1/sqrt(3)
+    # No stuck values: almost every entry distinct.
+    assert len(np.unique(a)) > 0.9 * a.size
+
+
+def test_alpha_hash_avoids_zero_fixed_point():
+    """Counter values hashing from 0 must not produce the all-zero orbit."""
+    a = xorshift.alpha_hash(0, 4, 4)  # seed 0 ^ ctr 1.. includes small values
+    assert not np.allclose(np.asarray(a), xorshift.u16_to_unit(jnp.uint16(0)))
+
+
+def test_alpha_dense_reproducible():
+    a1 = xorshift.alpha_dense(5, 10, 12)
+    a2 = xorshift.alpha_dense(5, 10, 12)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
