@@ -1,0 +1,150 @@
+"""Fleet throughput: vmap-rank-1 baseline vs engine vs engine+kernel.
+
+Measures stream-steps/second for T ticks of S concurrent ODL streams:
+
+  * ``vmap``          — the pre-engine serving path: one jitted dispatch per
+    tick doing fleet_predict + fleet_should_query + vmapped rank-1
+    ``fleet_update`` (hidden projected twice, a (1, 1) solve per stream).
+  * ``engine``        — ``repro.engine.run_fleet``: fused fleet_step scanned
+    over time inside one donated jit call per chunk.
+  * ``engine+kernel`` — same with ``use_kernel=True`` (the batched Pallas
+    RLS entry; interpret mode on CPU, so S is capped — the number recorded
+    validates the routing, not TPU speed).
+
+Writes BENCH_fleet.json next to the repo root.
+
+Run:  PYTHONPATH=src python benchmarks/fleet_bench.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine
+from repro.core import drift as drift_mod
+from repro.core import odl_head, oselm, pruning
+
+N_IN, N_HIDDEN, N_OUT = 64, 64, 6
+KERNEL_S_CAP = 256  # interpret-mode Pallas iterates the stream grid in Python
+
+
+def _cfg(use_kernel: bool = False) -> odl_head.ODLCoreConfig:
+    return odl_head.ODLCoreConfig(
+        elm=oselm.OSELMConfig(
+            n_in=N_IN, n_hidden=N_HIDDEN, n_out=N_OUT, variant="hash",
+            ridge=1e-2, use_kernel=use_kernel,
+        ),
+        prune=pruning.PruneConfig(min_trained=8),
+        drift=drift_mod.DriftConfig(),
+    )
+
+
+def _data(t, s, cfg):
+    kx, ky = jax.random.split(jax.random.PRNGKey(0))
+    xs = jnp.tanh(jax.random.normal(kx, (t, s, cfg.elm.n_in)))
+    ys = jax.random.randint(ky, (t, s), 0, cfg.elm.n_out)
+    return xs, ys
+
+
+def _time(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters, out
+
+
+def bench_vmap(cfg, xs, ys):
+    """Tick-at-a-time vmap baseline (state pinned outside jit per tick)."""
+    ecfg, pcfg = cfg.elm, cfg.prune
+    s = xs.shape[1]
+
+    @jax.jit
+    def tick(elm, prune, x, y):
+        preds, outs = oselm.fleet_predict(elm, x, ecfg)
+        conf = pruning.confidence(outs)
+        drift = jnp.zeros((s,), jnp.bool_)
+        queried = pruning.fleet_should_query(prune, outs, elm.count, drift, pcfg)
+        yoh = jax.nn.one_hot(y, ecfg.n_out)
+        elm = oselm.fleet_update(elm, x, yoh, ecfg, mask=queried.astype(jnp.float32),
+                                 use_kernel=False)
+        prune = pruning.fleet_update(prune, queried, preds == y, conf, pcfg)
+        return elm, prune
+
+    def run(elm, prune):
+        for t in range(xs.shape[0]):
+            elm, prune = tick(elm, prune, xs[t], ys[t])
+        return elm.beta
+
+    elm0, prune0 = oselm.init_fleet(ecfg, s), pruning.init_fleet(s)
+    dt, _ = _time(run, elm0, prune0)
+    return dt
+
+
+def bench_engine(cfg, xs, ys, chunk):
+    def run(state):
+        state, _ = engine.run_fleet(state, xs, ys, cfg, mode="train_phase", chunk=chunk)
+        return state.elm.beta
+
+    dt, _ = _time(run, engine.init_fleet(cfg, xs.shape[1]))
+    return dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small sizes only")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.out is None:
+        name = "BENCH_fleet_quick.json" if args.quick else "BENCH_fleet.json"
+        args.out = str(pathlib.Path(__file__).resolve().parent.parent / name)
+
+    sizes = [(64, 32), (1024, 16)] if not args.quick else [(64, 8)]
+    rows = []
+    print(f"== Fleet throughput (n_in={N_IN}, N={N_HIDDEN}) ==")
+    for s, t in sizes:
+        cfg = _cfg()
+        xs, ys = _data(t, s, cfg)
+        steps = t * s
+
+        dt_vmap = bench_vmap(cfg, xs, ys)
+        dt_eng = bench_engine(cfg, xs, ys, chunk=t)
+
+        sk = min(s, KERNEL_S_CAP)
+        kcfg = _cfg(use_kernel=True)
+        dt_k = bench_engine(kcfg, xs[:, :sk], ys[:, :sk], chunk=t)
+        k_sps = (t * sk) / dt_k
+
+        row = {
+            "streams": s,
+            "ticks": t,
+            "n_hidden": N_HIDDEN,
+            "vmap_streams_per_s": steps / dt_vmap,
+            "engine_streams_per_s": steps / dt_eng,
+            "engine_kernel_streams": sk,
+            "engine_kernel_streams_per_s": k_sps,
+            "engine_speedup_vs_vmap": dt_vmap / dt_eng,
+        }
+        rows.append(row)
+        print(
+            f"S={s:5d} T={t:3d}: vmap {row['vmap_streams_per_s']:>12,.0f} sps | "
+            f"engine {row['engine_streams_per_s']:>12,.0f} sps "
+            f"({row['engine_speedup_vs_vmap']:.1f}x) | "
+            f"engine+kernel[{sk}] {k_sps:>10,.0f} sps"
+        )
+
+    out = {"bench": "fleet", "backend": jax.default_backend(), "rows": rows}
+    pathlib.Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -21,12 +21,17 @@ def main(argv=None) -> None:
                     help="skip the minutes-long accuracy experiments")
     args = ap.parse_args(argv)
 
-    from benchmarks import kernels_bench, paper_tables, roofline
+    from benchmarks import fleet_bench, kernels_bench, paper_tables, roofline
 
     rows = []
     rows += paper_tables.table1_memory()
     rows += paper_tables.table4_core()
     rows += kernels_bench.main()
+    rows += [
+        (f"fleet/S{r['streams']}_engine_sps", r["engine_streams_per_s"],
+         f"vmap={r['vmap_streams_per_s']:.0f} speedup={r['engine_speedup_vs_vmap']:.2f}x")
+        for r in fleet_bench.main(["--quick"])
+    ]
     if not args.skip_drift:
         rows += paper_tables.table2_params(trials=min(3, args.trials))
         rows += paper_tables.table3_drift(trials=args.trials)

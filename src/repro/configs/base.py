@@ -16,6 +16,7 @@ class ODLHeadConfig:
     seed: int = 0x2D2A
     ridge: float = 1e-2
     enabled: bool = True
+    use_kernel: bool = False  # route head training through the Pallas kernels
 
 
 @dataclasses.dataclass(frozen=True)

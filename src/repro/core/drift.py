@@ -53,14 +53,19 @@ def init_state() -> DriftState:
 
 
 def score(x: jnp.ndarray, outputs: jnp.ndarray, cfg: DriftConfig) -> jnp.ndarray:
-    """Scalar drift score for one sample."""
+    """Drift score; x: (..., n_in), outputs: (..., m) -> score (...,).
+
+    Batched over any leading axes (the fleet engine passes (S, n_in)), and
+    all transitions below are elementwise, so the same detector runs scalar
+    or fleet-wide unchanged.
+    """
     parts = []
     if cfg.use_features:
-        parts.append(jnp.mean(jnp.abs(x.astype(jnp.float32))))
+        parts.append(jnp.mean(jnp.abs(x.astype(jnp.float32)), axis=-1))
     if cfg.use_confidence:
         top2 = jax.lax.top_k(outputs, 2)[0]
         parts.append(-(top2[..., 0] - top2[..., 1]))  # low confidence -> high score
-    return jnp.stack(parts).mean()
+    return jnp.stack(parts, axis=0).mean(axis=0)
 
 
 def update(state: DriftState, s: jnp.ndarray, cfg: DriftConfig) -> DriftState:

@@ -1,15 +1,19 @@
-"""The paper's top-level ODL loop (Algorithm 1) as composable JAX.
+"""The paper's top-level ODL loop (Algorithm 1) — scalar S=1 shim.
 
-``ODLCore`` bundles OS-ELM + P1P2 auto-pruning + drift detection + comm
-metering into one pytree state with a pure step function, usable three ways:
+The actual state machine lives in ``repro/engine`` (the batched fleet
+engine); this module keeps the original single-stream API for the
+paper-repro tests and small examples by adding a leading stream axis of 1,
+delegating to ``engine.fleet_step`` / ``engine.run_fleet``, and stripping
+the axis again.  Semantics are bit-identical per stream; new code that
+handles more than one stream should use ``repro.engine`` directly (this
+scalar API is deprecated for fleet work — see ROADMAP "Open items").
 
-  * ``step``            — full Algorithm 1 (drift detector switches modes);
-  * ``train_phase_step``— the paper's evaluation protocol (§3: an explicit
-                          retraining phase over a sample stream);
-  * attached to a backbone (``models/model.py``) where backbone features are
-    the ``x`` inputs — the fleet-scale deployment.
-
-All steps are ``lax.scan``-able and vmap-able over streams.
+``ODLCoreConfig`` / ``ODLCoreState`` / ``StepOutput`` are defined here (the
+lowest layer) and re-exported by the engine as ``EngineConfig`` /
+``EngineState`` / ``FleetStepOutput``: the same pytrees serve both the
+scalar and the fleet view, so existing checkpoints and configs keep working.
+The engine import is deferred to call time to keep ``repro.core`` importable
+on its own.
 """
 
 from __future__ import annotations
@@ -27,6 +31,8 @@ from repro.core import oselm, pruning
 
 @dataclasses.dataclass(frozen=True)
 class ODLCoreConfig:
+    """ODL configuration (identical semantics for S = 1 and a fleet)."""
+
     elm: oselm.OSELMConfig = oselm.OSELMConfig()
     prune: pruning.PruneConfig = None  # type: ignore[assignment]
     drift: drift_mod.DriftConfig = drift_mod.DriftConfig()
@@ -39,6 +45,9 @@ class ODLCoreConfig:
 
 
 class ODLCoreState(NamedTuple):
+    """elm/prune/drift/meter; scalar leaves here, leading-S leaves in the
+    fleet engine (which aliases this class as ``EngineState``)."""
+
     elm: oselm.OSELMState
     prune: pruning.PruneState
     drift: drift_mod.DriftState
@@ -46,13 +55,19 @@ class ODLCoreState(NamedTuple):
 
 
 class StepOutput(NamedTuple):
-    pred: jnp.ndarray  # () int32 local predicted class c
-    outputs: jnp.ndarray  # (m,) raw outputs O
-    queried: jnp.ndarray  # () bool
-    trained: jnp.ndarray  # () bool
-    theta: jnp.ndarray  # () f32 current threshold
-    confidence: jnp.ndarray  # () f32 p1 - p2
-    mode_training: jnp.ndarray  # () bool
+    pred: jnp.ndarray  # int32 local predicted class c
+    outputs: jnp.ndarray  # (.., m) raw outputs O
+    queried: jnp.ndarray  # bool
+    trained: jnp.ndarray  # bool
+    theta: jnp.ndarray  # f32 current threshold
+    confidence: jnp.ndarray  # f32 p1 - p2
+    mode_training: jnp.ndarray  # bool
+
+
+def _engine():
+    from repro.engine import fleet  # deferred: engine sits above core
+
+    return fleet
 
 
 def init_state(cfg: ODLCoreConfig) -> ODLCoreState:
@@ -64,11 +79,36 @@ def init_state(cfg: ODLCoreConfig) -> ODLCoreState:
     )
 
 
-def _train_if(state: ODLCoreState, x, y, do_train, cfg: ODLCoreConfig) -> oselm.OSELMState:
-    """Masked rank-1 RLS update: shapes stay static, a skipped step is exact
-    identity on (P, beta, count)."""
-    mask = do_train.astype(jnp.float32)[None]
-    return oselm.sequential_update(state.elm, x[None], y[None], cfg.elm, mask=mask)
+def _expand(tree):
+    """Scalar state/arrays -> fleet of one stream (leading axis 1)."""
+    return jax.tree.map(lambda a: jnp.asarray(a)[None], tree)
+
+
+def _squeeze(tree):
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+def _scalar_step(
+    state: ODLCoreState,
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    teacher: Callable,
+    cfg: ODLCoreConfig,
+    mode: str,
+    teacher_available: Optional[jnp.ndarray],
+    drift_active: Optional[jnp.ndarray],
+) -> tuple[ODLCoreState, StepOutput]:
+    t = teacher(idx, x)  # always traced (static shapes), used only if queried
+    fstate, fout = _engine().fleet_step(
+        _expand(state),
+        x[None],
+        jnp.asarray(t, jnp.int32)[None],
+        cfg,
+        mode=mode,
+        teacher_available=None if teacher_available is None else _expand(teacher_available),
+        drift_active=None if drift_active is None else _expand(drift_active),
+    )
+    return _squeeze(fstate), _squeeze(fout)
 
 
 def train_phase_step(
@@ -86,41 +126,9 @@ def train_phase_step(
     ``teacher_available`` models the paper's retry-or-skip fault policy: when
     False the query is suppressed *and* no training happens this step.
     """
-    if drift_active is None:
-        drift_active = jnp.zeros((), jnp.bool_)
-    if teacher_available is None:
-        teacher_available = jnp.ones((), jnp.bool_)
-
-    c, o = oselm.predict(state.elm, x, cfg.elm)
-    conf = pruning.confidence(o)
-    want_query = pruning.should_query(
-        state.prune, o, state.elm.count, drift_active, cfg.prune
+    return _scalar_step(
+        state, x, idx, teacher, cfg, "train_phase", teacher_available, drift_active
     )
-    queried = jnp.logical_and(want_query, teacher_available)
-
-    t, y, meter = labels_mod.acquire(
-        teacher, idx, x, queried, cfg.elm.n_out, state.meter
-    )
-    agree = c == t
-    new_elm = _train_if(state, x, y, queried, cfg)
-    # Auto-theta update only observes steps where pruning was in play: a
-    # teacher outage is neither success nor failure.
-    new_prune = jax.tree.map(
-        lambda new, old: jnp.where(teacher_available, new, old),
-        pruning.update(state.prune, queried, agree, conf, cfg.prune),
-        state.prune,
-    )
-    new_state = ODLCoreState(elm=new_elm, prune=new_prune, drift=state.drift, meter=meter)
-    out = StepOutput(
-        pred=c,
-        outputs=o,
-        queried=queried,
-        trained=queried,
-        theta=pruning.theta_of(state.prune, cfg.prune),
-        confidence=conf,
-        mode_training=jnp.ones((), jnp.bool_),
-    )
-    return new_state, out
 
 
 def step(
@@ -131,52 +139,7 @@ def step(
     cfg: ODLCoreConfig,
 ) -> tuple[ODLCoreState, StepOutput]:
     """Full Algorithm 1: drift detector switches predicting <-> training."""
-    c, o = oselm.predict(state.elm, x, cfg.elm)
-    conf = pruning.confidence(o)
-
-    # IsDrift / IsTrainDone: one detector with hysteresis (drift.py).
-    s = drift_mod.score(x, o, cfg.drift)
-    new_drift = drift_mod.update(state.drift, s, cfg.drift)
-    training = new_drift.active
-
-    # Rising edge of `active` == IsDrift fired: a new phase begins (the
-    # per-phase counter is diagnostic only; condition 1 is lifetime count).
-    entering = jnp.logical_and(training, jnp.logical_not(state.drift.active))
-    prune_st = jax.tree.map(
-        lambda r, o_: jnp.where(entering, r, o_),
-        pruning.reset_phase(state.prune),
-        state.prune,
-    )
-
-    # Condition 2: during an active drift phase the early samples must query
-    # until the detector's confidence recovers; we pass the detector state
-    # straight through (drift_active = still in training mode).
-    want_query = pruning.should_query(
-        prune_st, o, state.elm.count, jnp.zeros((), jnp.bool_), cfg.prune
-    )
-    queried = jnp.logical_and(training, want_query)
-
-    t, y, meter = labels_mod.acquire(
-        teacher, idx, x, queried, cfg.elm.n_out, state.meter
-    )
-    agree = c == t
-    new_elm = _train_if(state, x, y, queried, cfg)
-    new_prune = jax.tree.map(
-        lambda new, old: jnp.where(training, new, old),
-        pruning.update(prune_st, queried, agree, conf, cfg.prune),
-        prune_st,
-    )
-    new_state = ODLCoreState(elm=new_elm, prune=new_prune, drift=new_drift, meter=meter)
-    out = StepOutput(
-        pred=c,
-        outputs=o,
-        queried=queried,
-        trained=queried,
-        theta=pruning.theta_of(prune_st, cfg.prune),
-        confidence=conf,
-        mode_training=training,
-    )
-    return new_state, out
+    return _scalar_step(state, x, idx, teacher, cfg, "algo1", None, None)
 
 
 def run_training_phase(
@@ -186,24 +149,24 @@ def run_training_phase(
     cfg: ODLCoreConfig,
     teacher_available: Optional[jnp.ndarray] = None,  # (T,) bool
 ) -> tuple[ODLCoreState, StepOutput]:
-    """Scan ``train_phase_step`` over a stream (paper §3 step 3).
+    """Scan the retraining phase over a stream (paper §3 step 3) — a one-
+    stream ``engine.run_fleet``.
 
     Condition 1 is lifetime trained count — initial training (step 1) already
     satisfies max(N, 288), so pruning is armed from the first stream sample,
     exactly as required to reproduce Fig. 3/4 (see should_query docstring).
     """
     state = state._replace(prune=pruning.reset_phase(state.prune))
-    teacher = labels_mod.ArrayTeacher(labels=teacher_labels)
-    avail = (
-        jnp.ones(xs.shape[0], jnp.bool_) if teacher_available is None else teacher_available
+    avail = None if teacher_available is None else teacher_available[:, None]
+    fstate, fouts = _engine().run_fleet(
+        _expand(state),
+        xs[:, None],
+        jnp.asarray(teacher_labels, jnp.int32)[:, None],
+        cfg,
+        mode="train_phase",
+        teacher_available=avail,
     )
-
-    def body(st, inp):
-        i, x, av = inp
-        return train_phase_step(st, x, i, teacher, cfg, teacher_available=av)
-
-    idxs = jnp.arange(xs.shape[0], dtype=jnp.int32)
-    return jax.lax.scan(body, state, (idxs, xs, avail))
+    return _squeeze(fstate), jax.tree.map(lambda a: a[:, 0], fouts)
 
 
 def run_stream(
@@ -212,15 +175,15 @@ def run_stream(
     teacher_labels: jnp.ndarray,
     cfg: ODLCoreConfig,
 ) -> tuple[ODLCoreState, StepOutput]:
-    """Scan the full Algorithm-1 ``step`` over a stream."""
-    teacher = labels_mod.ArrayTeacher(labels=teacher_labels)
-
-    def body(st, inp):
-        i, x = inp
-        return step(st, x, i, teacher, cfg)
-
-    idxs = jnp.arange(xs.shape[0], dtype=jnp.int32)
-    return jax.lax.scan(body, state, (idxs, xs))
+    """Scan the full Algorithm-1 ``step`` over a stream (one-stream fleet)."""
+    fstate, fouts = _engine().run_fleet(
+        _expand(state),
+        xs[:, None],
+        jnp.asarray(teacher_labels, jnp.int32)[:, None],
+        cfg,
+        mode="algo1",
+    )
+    return _squeeze(fstate), jax.tree.map(lambda a: a[:, 0], fouts)
 
 
 def accuracy(

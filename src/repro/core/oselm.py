@@ -152,7 +152,7 @@ def sequential_update(
     cfg: OSELMConfig,
     alpha: Optional[jnp.ndarray] = None,
     mask: Optional[jnp.ndarray] = None,
-    use_kernel: bool = False,
+    use_kernel: Optional[bool] = None,
 ) -> OSELMState:
     """Rank-k RLS update (Fig. 2(d)).  x: (k, n_in) or (n_in,); y one-hot.
 
@@ -160,7 +160,12 @@ def sequential_update(
     batch shape — pruning must not change trace shapes under jit). A masked
     row contributes exactly nothing: H_row := 0 ⇒ S row/col = identity's,
     and the beta innovation term is zeroed.
+
+    ``use_kernel`` defaults to ``cfg.use_kernel``, so configuring the Pallas
+    path on the config reaches every training entry point.
     """
+    if use_kernel is None:
+        use_kernel = cfg.use_kernel
     if x.ndim == 1:
         x = x[None]
         y = y[None]
@@ -223,10 +228,81 @@ def fleet_predict(state: OSELMState, x: jnp.ndarray, cfg: OSELMConfig):
 
 
 def fleet_update(state: OSELMState, x: jnp.ndarray, y: jnp.ndarray, cfg: OSELMConfig,
-                 mask: Optional[jnp.ndarray] = None) -> OSELMState:
-    """x: (S, n_in), y: (S, m), mask: (S,) — rank-1 update per stream."""
+                 mask: Optional[jnp.ndarray] = None,
+                 use_kernel: Optional[bool] = None) -> OSELMState:
+    """x: (S, n_in), y: (S, m), mask: (S,) — rank-1 update per stream.
+
+    This is the vmap-of-rank-1 baseline; ``repro.engine`` and the serve path
+    use :func:`fleet_rank1_update_h` (einsum-batched, kernel-routable)
+    instead.  ``use_kernel`` (default: ``cfg.use_kernel``) dispatches to the
+    batched Pallas entry rather than vmapping a scalar ``pallas_call``.
+    """
     if mask is None:
         mask = jnp.ones(x.shape[0], jnp.float32)
+    if use_kernel is None:
+        use_kernel = cfg.use_kernel
+    if use_kernel:
+        return fleet_rank1_update(state, x, y, cfg, mask=mask, use_kernel=True)
     return jax.vmap(
-        lambda st, xx, yy, mm: sequential_update(st, xx, yy, cfg, mask=mm)
+        lambda st, xx, yy, mm: sequential_update(st, xx, yy, cfg, mask=mm, use_kernel=False)
     )(state, x, y, mask)
+
+
+def fleet_rank1_update_h(
+    state: OSELMState,  # leaves with leading S
+    h: jnp.ndarray,  # (S, N) hidden activations, one row per stream
+    y: jnp.ndarray,  # (S, m) one-hot targets
+    cfg: OSELMConfig,
+    mask: Optional[jnp.ndarray] = None,  # (S,) in {0, 1}
+    use_kernel: Optional[bool] = None,
+) -> OSELMState:
+    """Fused fleet rank-1 RLS: the whole Woodbury update for S independent
+    heads as batched einsums (one XLA fusion, no per-stream solve).
+
+    Takes precomputed hidden activations so callers that already predicted
+    this tick (the engine's fleet_step) never project twice.  A masked
+    stream is an exact identity on (P, beta, count), same contract as
+    ``sequential_update``.
+    """
+    if mask is None:
+        mask = jnp.ones(h.shape[0], jnp.float32)
+    if use_kernel is None:
+        use_kernel = cfg.use_kernel
+    hm = h * mask[:, None]
+    ym = y.astype(jnp.float32) * mask[:, None]
+
+    if use_kernel:
+        from repro.kernels import ops  # lazy: kernels are optional at import
+
+        new_p, new_beta = ops.oselm_rls_update_fleet(
+            state.P, state.beta, hm[:, None, :], ym[:, None, :]
+        )
+    else:
+        pht = jnp.einsum("snk,sk->sn", state.P, hm)  # (S, N) = P h
+        den = 1.0 + jnp.einsum("sn,sn->s", hm, pht)  # (S,) = 1 + h P hᵀ
+        new_p = state.P - pht[:, :, None] * (pht[:, None, :] / den[:, None, None])
+        new_p = 0.5 * (new_p + new_p.transpose(0, 2, 1))  # symmetry (numerics)
+        err = ym - jnp.einsum("sn,snm->sm", hm, state.beta)  # (S, m)
+        # Rank-1 identity: P' hᵀ = (P - P hᵀh P/den) hᵀ = pht/den, so the
+        # innovation beta' = beta + P' hᵀ e needs no (N, N) x (N, m) matmul
+        # — the classic RLS gain vector, O(S N m) instead of O(S N² m).
+        gain = pht / den[:, None]
+        new_beta = state.beta + gain[:, :, None] * err[:, None, :]
+
+    return OSELMState(
+        beta=new_beta, P=new_p, count=state.count + mask.astype(jnp.int32)
+    )
+
+
+def fleet_rank1_update(
+    state: OSELMState,
+    x: jnp.ndarray,  # (S, n_in)
+    y: jnp.ndarray,  # (S, m)
+    cfg: OSELMConfig,
+    mask: Optional[jnp.ndarray] = None,
+    use_kernel: Optional[bool] = None,
+) -> OSELMState:
+    """As :func:`fleet_rank1_update_h` but projecting ``x`` itself."""
+    return fleet_rank1_update_h(
+        state, hidden(x, cfg), y, cfg, mask=mask, use_kernel=use_kernel
+    )

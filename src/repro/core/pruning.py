@@ -61,8 +61,11 @@ def init_state() -> PruneState:
 
 
 def reset_phase(state: PruneState) -> PruneState:
-    """New training phase (drift detected): re-arm condition 1."""
-    return state._replace(phase_trained=jnp.zeros((), jnp.int32))
+    """New training phase (drift detected): re-arm condition 1.
+
+    Shape-polymorphic: works on scalar and fleet ((S,)-leaf) states alike.
+    """
+    return state._replace(phase_trained=jnp.zeros_like(state.phase_trained))
 
 
 def theta_of(state: PruneState, cfg: PruneConfig) -> jnp.ndarray:

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed import sharding
+
 
 def pipeline_forward(
     h: jnp.ndarray,  # (M, B_mb, ...) microbatched activations (replicated)
@@ -66,12 +68,12 @@ def pipeline_forward(
         # Only the last stage holds real outputs; psum replicates them.
         return jax.lax.psum(outputs * jnp.where(stage == last, 1.0, 0.0).astype(outputs.dtype), axis)
 
-    return jax.shard_map(
+    return sharding.shard_map(
         per_stage,
         mesh=mesh,
         in_specs=(P(), P(axis)),
         out_specs=P(),
-        check_vma=False,
+        check=False,
     )(h, stage_params)
 
 

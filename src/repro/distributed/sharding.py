@@ -166,3 +166,38 @@ def ensure_model_sharded(spec: P, shape: tuple) -> P:
 
 def mesh_or_none() -> Optional[Mesh]:
     return _current()[0]
+
+
+def shard_map(f, mesh, in_specs, out_specs, check=False):
+    """``jax.shard_map`` across jax versions: >= 0.5 exposes it top-level
+    with ``check_vma``; 0.4.x has ``jax.experimental.shard_map.shard_map``
+    with ``check_rep``."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as sm_old
+
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check)
+
+
+def constrain_fleet(tree):
+    """Constrain the leading axis of every leaf to the ``stream`` rule.
+
+    The ODL fleet (``repro.engine.EngineState``) carries one head per stream
+    on the leading axis of every leaf; under an active mesh this splits the
+    fleet over ``("pod", "data")`` (per DEFAULT_RULES) with zero
+    cross-stream communication.  Identity with no mesh active, and streams
+    that don't divide the axis degrade to replication (see ``resolve``).
+    """
+    mesh, _ = _current()
+    if mesh is None:
+        return tree
+    return jax.tree.map(
+        lambda a: constrain(a, "stream", *((None,) * (a.ndim - 1))), tree
+    )
+
+
+def fleet_sharding(leaf_ndim: int, shape: Optional[tuple] = None) -> Optional[NamedSharding]:
+    """NamedSharding placing a fleet leaf's leading axis on the stream rule
+    (for explicit ``jax.device_put`` of an EngineState onto a mesh)."""
+    return named_sharding("stream", *((None,) * (leaf_ndim - 1)), shape=shape)

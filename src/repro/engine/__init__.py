@@ -1,0 +1,72 @@
+"""repro.engine — fleet-scale ODL: Algorithm 1 batched over streams.
+
+This package owns the scalable serving substrate for the paper's ODL core
+(OS-ELM + P1P2 auto-pruning + drift gating).  Where ``core/odl_head.py``
+expresses Algorithm 1 for ONE stream (and is now a thin ``S = 1`` shim kept
+for the paper-repro tests), the engine runs the same state machine for a
+whole fleet of independent streams in one fused, jitted step.
+
+State layout
+------------
+``EngineState`` is a single pytree with a leading stream axis ``S`` on every
+leaf::
+
+    EngineState
+    ├── elm:   OSELMState   beta (S, N, m) · P (S, N, N) · count (S,)
+    ├── prune: PruneState   level/streak/queries/skips/phase_trained (S,)
+    ├── drift: DriftState   mean/var/steps/hits/calm/active (S,)
+    └── meter: CommMeter    up_bytes/down_bytes (S,)
+
+One ``fleet_step(state, x: (S, n_in), labels: (S,))`` performs
+predict → confidence → drift update → should_query → masked rank-1 RLS for
+all S streams with batched linear algebra (one hidden-projection matmul and
+einsum-batched Woodbury updates — no per-stream Python, no vmapped k×k
+solves).  With ``cfg.elm.use_kernel`` the RLS update routes through the
+fused Pallas kernel (``kernels/oselm_update.oselm_rls_update_fleet``), which
+reads each P tile once for both the downdate and the beta update.
+
+Chunked time scan
+-----------------
+``run_fleet(state, xs: (T, S, n_in), labels: (T, S))`` scans ``fleet_step``
+over time inside jit, in chunks of ``chunk`` ticks: a Python loop dispatches
+one donated jit call per chunk (``donate_argnums=0`` — P, the dominant
+buffer at S·N²·4 bytes, is updated in place on TPU), and each chunk's
+compiled executable is cached per ``(cfg, mode, chunk shape)`` so chunk
+boundaries never recompile.  T×S stream-steps therefore cost T/chunk
+dispatches total instead of T×S per-sample Python overhead.
+
+Sharding
+--------
+Every ``fleet_step`` constrains the leading axis of all state leaves to the
+``"stream"`` logical axis (``distributed/sharding.py``), which the default
+rule table maps to ``("pod", "data")`` — under an active mesh the fleet
+splits across devices with zero cross-stream communication.
+
+Modes
+-----
+* ``mode="algo1"``       — the paper's full Algorithm 1: the per-stream
+  drift detector switches predicting ↔ training; queries only happen in
+  training mode.
+* ``mode="train_phase"`` — the §3 evaluation protocol: an explicit
+  retraining phase, pruning always armed, optional per-stream
+  ``teacher_available`` outage modelling.
+
+Serving entry points (``gate`` / ``apply_labels``) split one step at the
+label round-trip: ``gate`` predicts and decides which streams must consult
+the teacher (charging the comm meter); ``apply_labels`` later applies the
+teacher's answers with the same masked RLS update.  ``models/model.py``'s
+serve path and ``launch/serve.py`` run on these.
+"""
+
+from repro.engine.fleet import (  # noqa: F401
+    EngineConfig,
+    EngineState,
+    FleetStepOutput,
+    apply_labels,
+    broadcast_streams,
+    fleet_step,
+    gate,
+    init_fleet,
+    run_fleet,
+    stream_slice,
+)

@@ -1,0 +1,275 @@
+"""Batched fleet engine for Algorithm 1 (see package docstring).
+
+Design rules:
+  * every leaf of ``EngineState`` carries a leading stream axis S;
+  * all per-stream controller math (pruning ladder, drift detector) is
+    elementwise jnp, so the scalar transition functions in ``core/`` apply
+    to (S,) arrays unchanged — no vmap anywhere on the hot path;
+  * the only matmuls are one (S, n_in) @ alpha hidden projection and the
+    einsum-batched rank-1 Woodbury update (optionally the fused Pallas
+    kernel via ``cfg.elm.use_kernel``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import drift as drift_mod
+from repro.core import labels as labels_mod
+from repro.core import odl_head as _head
+from repro.core import oselm, pruning
+from repro.distributed import sharding
+
+# The pytree/config classes are defined in core (lowest layer) so scalar and
+# fleet views share one type; the engine is the batched owner of their
+# semantics.  Leaves of an EngineState carry a leading stream axis S.
+EngineConfig = _head.ODLCoreConfig
+EngineState = _head.ODLCoreState
+FleetStepOutput = _head.StepOutput
+
+
+def init_fleet(cfg: EngineConfig, n_streams: int) -> EngineState:
+    return broadcast_streams(_head.init_state(cfg), n_streams)
+
+
+def broadcast_streams(state: EngineState, n_streams: int) -> EngineState:
+    """Replicate one (scalar, no-S-axis) state across n_streams streams."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_streams,) + a.shape), state
+    )
+
+
+def stream_slice(state: EngineState, s: int) -> EngineState:
+    """Extract stream ``s`` as a scalar (axis-free) state."""
+    return jax.tree.map(lambda a: a[s], state)
+
+
+def _tree_where(cond: jnp.ndarray, a, b):
+    """Per-stream select between two pytrees of (S,)-leading leaves."""
+    return jax.tree.map(
+        lambda x, y: jnp.where(cond.reshape(cond.shape + (1,) * (x.ndim - cond.ndim)), x, y),
+        a,
+        b,
+    )
+
+
+def _predict(state: EngineState, x: jnp.ndarray, cfg: EngineConfig):
+    """Fleet predict: hidden projection once, per-stream readout via einsum."""
+    h = oselm.hidden(x, cfg.elm)  # (S, N)
+    o = jnp.einsum("sn,snm->sm", h, state.elm.beta)  # (S, m)
+    return h, jnp.argmax(o, axis=-1), o
+
+
+def fleet_step(
+    state: EngineState,
+    x: jnp.ndarray,  # (S, n_in)
+    labels: jnp.ndarray,  # (S,) int32 teacher answers (used only where queried)
+    cfg: EngineConfig,
+    mode: str = "algo1",
+    teacher_available: Optional[jnp.ndarray] = None,  # (S,) bool
+    drift_active: Optional[jnp.ndarray] = None,  # (S,) bool (train_phase only)
+) -> tuple[EngineState, FleetStepOutput]:
+    """One fused tick for all S streams: predict → confidence → drift →
+    should_query → masked rank-1 RLS.  Semantics per stream are exactly the
+    scalar Algorithm-1 ``step`` (mode='algo1') / §3 retraining
+    ``train_phase_step`` (mode='train_phase') of ``core/odl_head.py``.
+    """
+    if mode not in ("algo1", "train_phase"):
+        raise ValueError(f"unknown engine mode {mode!r}")
+    n_streams = x.shape[0]
+    if teacher_available is None:
+        teacher_available = jnp.ones((n_streams,), jnp.bool_)
+
+    h, c, o = _predict(state, x, cfg)
+    conf = pruning.confidence(o)
+
+    if mode == "algo1":
+        # IsDrift / IsTrainDone: per-stream detector with hysteresis.
+        s = drift_mod.score(x, o, cfg.drift)  # (S,)
+        new_drift = drift_mod.update(state.drift, s, cfg.drift)
+        training = new_drift.active
+        # Rising edge == IsDrift fired: re-arm the per-phase counter.
+        entering = jnp.logical_and(training, jnp.logical_not(state.drift.active))
+        prune_st = _tree_where(entering, pruning.reset_phase(state.prune), state.prune)
+        want_query = pruning.should_query(
+            prune_st, o, state.elm.count, jnp.zeros((n_streams,), jnp.bool_), cfg.prune
+        )
+        queried = training & want_query & teacher_available
+        # Auto-theta only observes training-mode steps with a live teacher.
+        controller_on = training & teacher_available
+    else:
+        if drift_active is None:
+            drift_active = jnp.zeros((n_streams,), jnp.bool_)
+        new_drift = state.drift
+        training = jnp.ones((n_streams,), jnp.bool_)
+        prune_st = state.prune
+        want_query = pruning.should_query(
+            prune_st, o, state.elm.count, drift_active, cfg.prune
+        )
+        queried = want_query & teacher_available
+        controller_on = teacher_available
+
+    y = labels_mod.one_hot(labels, cfg.elm.n_out)  # (S, m)
+    meter = state.meter.charge_query(x.shape[-1], queried)
+    agree = c == labels
+    new_elm = oselm.fleet_rank1_update_h(
+        state.elm, h, y, cfg.elm, mask=queried.astype(jnp.float32)
+    )
+    new_prune = _tree_where(
+        controller_on,
+        pruning.update(prune_st, queried, agree, conf, cfg.prune),
+        prune_st,
+    )
+
+    new_state = sharding.constrain_fleet(
+        EngineState(elm=new_elm, prune=new_prune, drift=new_drift, meter=meter)
+    )
+    out = FleetStepOutput(
+        pred=c,
+        outputs=o,
+        queried=queried,
+        trained=queried,
+        theta=pruning.theta_of(prune_st, cfg.prune),
+        confidence=conf,
+        mode_training=training,
+    )
+    return new_state, out
+
+
+# ---------------------------------------------------------------------------
+# Chunked time scan
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_runner(cfg: EngineConfig, mode: str, donate: bool):
+    """One compiled executable per (cfg, mode, chunk shape): scans fleet_step
+    over a (chunk, S) block of ticks.  Cached so chunk boundaries reuse the
+    same jitted function (no recompile), and the state argument is donated
+    so P/beta update in place on accelerators."""
+
+    def run_chunk(state, xs, labels, avail):
+        def body(st, inp):
+            x_t, lab_t, av_t = inp
+            return fleet_step(st, x_t, lab_t, cfg, mode=mode, teacher_available=av_t)
+
+        return jax.lax.scan(body, state, (xs, labels, avail))
+
+    return jax.jit(run_chunk, donate_argnums=(0,) if donate else ())
+
+
+def run_fleet(
+    state: EngineState,
+    xs: jnp.ndarray,  # (T, S, n_in)
+    labels: jnp.ndarray,  # (T, S) int32
+    cfg: EngineConfig,
+    mode: str = "algo1",
+    teacher_available: Optional[jnp.ndarray] = None,  # (T, S) bool
+    chunk: Optional[int] = None,
+    donate: Optional[bool] = None,
+) -> tuple[EngineState, FleetStepOutput]:
+    """Run T ticks of S streams through the engine, ``chunk`` ticks per
+    dispatch.  Returns (final state, outputs stacked over (T, S)).
+
+    ``donate`` defaults to True off-CPU (CPU ignores donation and warns).
+    When T is a multiple of ``chunk`` every dispatch hits the same compiled
+    executable; a ragged final chunk costs exactly one extra compile.
+    """
+    t_total = xs.shape[0]
+    if t_total == 0:
+        s = xs.shape[1]
+        m = cfg.elm.n_out
+        empty = FleetStepOutput(
+            pred=jnp.zeros((0, s), jnp.int32),
+            outputs=jnp.zeros((0, s, m), jnp.float32),
+            queried=jnp.zeros((0, s), jnp.bool_),
+            trained=jnp.zeros((0, s), jnp.bool_),
+            theta=jnp.zeros((0, s), jnp.float32),
+            confidence=jnp.zeros((0, s), jnp.float32),
+            mode_training=jnp.zeros((0, s), jnp.bool_),
+        )
+        return state, empty
+    if chunk is None or chunk > t_total:
+        chunk = t_total
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    if teacher_available is None:
+        teacher_available = jnp.ones(xs.shape[:2], jnp.bool_)
+
+    runner = _chunk_runner(cfg, mode, donate)
+    outs = []
+    t = 0
+    while t < t_total:
+        c = min(chunk, t_total - t)
+        state, out = runner(
+            state, xs[t : t + c], labels[t : t + c], teacher_available[t : t + c]
+        )
+        outs.append(out)
+        t += c
+    if len(outs) == 1:
+        return state, outs[0]
+    return state, jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *outs)
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points: one tick split at the teacher round-trip.
+# ---------------------------------------------------------------------------
+
+
+def gate(
+    state: EngineState,
+    x: jnp.ndarray,  # (S, n_in) features, one per stream
+    cfg: EngineConfig,
+) -> tuple[EngineState, dict]:
+    """Predict + decide which streams must consult the teacher.
+
+    Runs the drift detector (a drifting stream is forced to query — the
+    paper's pruning condition 2) and charges the comm meter for issued
+    queries.  Labels arrive later via ``apply_labels``.
+    """
+    h, c, o = _predict(state, x, cfg)
+    del h
+    conf = pruning.confidence(o)
+    s = drift_mod.score(x, o, cfg.drift)
+    new_drift = drift_mod.update(state.drift, s, cfg.drift)
+    query_mask = pruning.should_query(
+        state.prune, o, state.elm.count, new_drift.active, cfg.prune
+    )
+    meter = state.meter.charge_query(x.shape[-1], query_mask)
+    new_state = sharding.constrain_fleet(
+        state._replace(drift=new_drift, meter=meter)
+    )
+    out = {
+        "pred": c,
+        "conf": conf,
+        "query_mask": query_mask,
+        "feats": x,
+        "outputs": o,
+        "drift_active": new_drift.active,
+    }
+    return new_state, out
+
+
+def apply_labels(
+    state: EngineState,
+    x: jnp.ndarray,  # (S, n_in) features captured at query time
+    labels: jnp.ndarray,  # (S,) int32 teacher answers (valid where mask)
+    mask: jnp.ndarray,  # (S,) bool — streams whose teacher answered
+    cfg: EngineConfig,
+) -> EngineState:
+    """Asynchronous label application: masked rank-1 RLS + auto-theta step."""
+    h, c, o = _predict(state, x, cfg)
+    conf = pruning.confidence(o)
+    agree = c == labels
+    y = labels_mod.one_hot(labels, cfg.elm.n_out)
+    new_elm = oselm.fleet_rank1_update_h(
+        state.elm, h, y, cfg.elm, mask=mask.astype(jnp.float32)
+    )
+    new_prune = pruning.update(state.prune, mask, agree, conf, cfg.prune)
+    return sharding.constrain_fleet(
+        state._replace(elm=new_elm, prune=new_prune)
+    )

@@ -46,6 +46,13 @@ def oselm_rls_update(
     return _oselm_update.oselm_rls_update(P, beta, H, Y, interpret=_interpret())
 
 
+def oselm_rls_update_fleet(
+    P: jnp.ndarray, beta: jnp.ndarray, H: jnp.ndarray, Y: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused rank-k RLS update for S independent heads (leading stream axis)."""
+    return _oselm_update.oselm_rls_update_fleet(P, beta, H, Y, interpret=_interpret())
+
+
 # Re-export oracles for benchmarking convenience.
 xorshift_projection_ref = _ref.xorshift_projection_ref
 oselm_rls_update_ref = _ref.oselm_rls_update_ref

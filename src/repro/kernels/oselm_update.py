@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _rls_kernel(p_ref, pht_ref, g_ref, w_ref, beta_ref, po_ref, bo_ref, *, nj_tiles: int):
+def _rls_kernel(p_ref, pht_ref, g_ref, w_ref, beta_ref, po_ref, bo_ref):
     j = pl.program_id(1)
 
     # Fused P tile update: read once, write once.
@@ -86,7 +86,7 @@ def oselm_rls_update(
 
     nt = np_ // tn
     p_out, b_out = pl.pallas_call(
-        functools.partial(_rls_kernel, nj_tiles=nt),
+        _rls_kernel,
         grid=(nt, nt),
         in_specs=[
             pl.BlockSpec((tn, tn), lambda i, j: (i, j)),  # P
@@ -106,3 +106,87 @@ def oselm_rls_update(
         interpret=interpret,
     )(P, pht, g, w, beta)
     return p_out[:n, :n], b_out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Fleet (batched) entry: S independent heads, one grid axis over streams.
+# ---------------------------------------------------------------------------
+
+
+def _rls_fleet_kernel(p_ref, pht_ref, g_ref, w_ref, beta_ref, po_ref, bo_ref):
+    """Same fused update as ``_rls_kernel`` with a leading stream grid axis:
+    grid (s, i, j) over streams x (TN_i x TN_j) tiles of that stream's P.
+    Block leading dims are 1 (one stream per iteration); j varies fastest,
+    so the per-(s, i) beta accumulation stays sequential."""
+    j = pl.program_id(2)
+
+    p_new = p_ref[0] - jnp.dot(
+        pht_ref[0], g_ref[0], preferred_element_type=jnp.float32
+    )
+    po_ref[0] = p_new
+
+    @pl.when(j == 0)
+    def _init():
+        bo_ref[0] = beta_ref[0]
+
+    bo_ref[0] += jnp.dot(p_new, w_ref[0], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
+def oselm_rls_update_fleet(
+    P: jnp.ndarray,  # (S, N, N) f32 — one inverse Gram per stream
+    beta: jnp.ndarray,  # (S, N, m) f32
+    H: jnp.ndarray,  # (S, k, N) f32 — rank-k rows per stream (k=1 for fleet ticks)
+    Y: jnp.ndarray,  # (S, k, m) f32
+    tn: int = 128,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused rank-k RLS update for S independent heads; returns (P', beta').
+
+    The small-operand stage (per-stream k x k solve etc.) is batched jnp; the
+    P/beta fusion runs in one ``pallas_call`` with grid (S, nt, nt) so each
+    stream's P tiles are still read once for both the Woodbury downdate and
+    the beta accumulation.  This is the entry ``use_kernel=True`` fleet
+    training routes through (``oselm.fleet_rank1_update_h``).
+    """
+    s_, n = P.shape[0], P.shape[1]
+    k = H.shape[1]
+    m = beta.shape[2]
+
+    pht = jnp.einsum("snj,skj->snk", P, H)  # (S, N, k) = P Hᵀ
+    ss = jnp.eye(k, dtype=jnp.float32) + jnp.einsum("skn,snj->skj", H, pht)
+    g = jnp.linalg.solve(ss, pht.transpose(0, 2, 1))  # (S, k, N) = S⁻¹ H P
+    e = Y.astype(jnp.float32) - jnp.einsum("skn,snm->skm", H, beta)
+    w = jnp.einsum("skn,skm->snm", H, e)  # (S, N, m) = Hᵀ E
+
+    tn = min(tn, _ceil_to(n, 8))  # small fleets (N < tn) use one N-sized tile
+    np_ = _ceil_to(n, tn)
+    if np_ != n:
+        P = jnp.zeros((s_, np_, np_), P.dtype).at[:, :n, :n].set(P)
+        pht = jnp.zeros((s_, np_, k), pht.dtype).at[:, :n].set(pht)
+        g = jnp.zeros((s_, k, np_), g.dtype).at[:, :, :n].set(g)
+        w = jnp.zeros((s_, np_, m), w.dtype).at[:, :n].set(w)
+        beta = jnp.zeros((s_, np_, m), beta.dtype).at[:, :n].set(beta)
+
+    nt = np_ // tn
+    p_out, b_out = pl.pallas_call(
+        _rls_fleet_kernel,
+        grid=(s_, nt, nt),
+        in_specs=[
+            pl.BlockSpec((1, tn, tn), lambda s, i, j: (s, i, j)),  # P
+            pl.BlockSpec((1, tn, k), lambda s, i, j: (s, i, 0)),  # PHt row block
+            pl.BlockSpec((1, k, tn), lambda s, i, j: (s, 0, j)),  # G col block
+            pl.BlockSpec((1, tn, m), lambda s, i, j: (s, j, 0)),  # W (indexed by j!)
+            pl.BlockSpec((1, tn, m), lambda s, i, j: (s, i, 0)),  # beta row block
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tn, tn), lambda s, i, j: (s, i, j)),
+            pl.BlockSpec((1, tn, m), lambda s, i, j: (s, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_, np_, np_), jnp.float32),
+            jax.ShapeDtypeStruct((s_, np_, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(P, pht, g, w, beta)
+    return p_out[:, :n, :n], b_out[:, :n]

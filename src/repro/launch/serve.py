@@ -39,9 +39,15 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
     )
 
     tok = prompts[:, -1:]
-    queries = skips = 0
+    queries = skips = applied = 0
     pending = None  # (feats, mask) awaiting teacher labels
     rng = np.random.default_rng(seed)
+
+    def answer(st, pend):
+        feats, mask = pend
+        labels = jnp.asarray(rng.integers(0, cfg.odl.n_out, size=batch), jnp.int32)
+        return apply_labels(st, feats, labels, mask), int(np.asarray(mask).sum())
+
     for i in range(gen_tokens):
         logits, state, odl = step(params, state, tok)
         tok = jnp.argmax(logits, -1)[:, None]
@@ -50,13 +56,19 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
         skips += int((~q).sum())
         # Async label acquisition: teacher answers last tick's queries.
         if pending is not None:
-            feats, mask = pending
-            labels = jnp.asarray(rng.integers(0, cfg.odl.n_out, size=batch), jnp.int32)
-            state = apply_labels(state, feats, labels, mask)
+            state, n = answer(state, pending)
+            applied += n
         pending = (odl["feats"], odl["query_mask"])
+    # The decode loop exits with the final tick's queries still in flight;
+    # apply those teacher answers too so no labels are silently dropped.
+    if pending is not None:
+        state, n = answer(state, pending)
+        applied += n
     total = queries + skips
+    meter_bytes = float(np.asarray(state.odl.meter.total).sum())
     print(f"decoded {gen_tokens} tokens x {batch} streams; "
-          f"teacher queries {queries}/{total} ({100*queries/total:.1f}% comm volume)")
+          f"teacher queries {queries}/{total} ({100*queries/max(total, 1):.1f}% comm volume), "
+          f"labels applied {applied}/{queries}, {meter_bytes/1e3:.1f} kB metered")
     return queries, skips
 
 

@@ -29,8 +29,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core import drift as drift_mod
 from repro.core import oselm, pruning
 from repro.distributed import sharding
+from repro.engine import fleet as engine
 from repro.models import encdec, layers, transformer
 from repro.models.layers import softmax_cross_entropy
 from repro.optim import adam
@@ -55,6 +57,17 @@ def elm_config(cfg: ModelConfig) -> oselm.OSELMConfig:
         variant=cfg.odl.variant,
         seed=cfg.odl.seed,
         ridge=cfg.odl.ridge,
+        use_kernel=cfg.odl.use_kernel,
+    )
+
+
+def core_config(cfg: ModelConfig) -> engine.EngineConfig:
+    """Fleet-engine config for this backbone's per-stream ODL heads."""
+    ecfg = elm_config(cfg)
+    return engine.EngineConfig(
+        elm=ecfg,
+        prune=pruning.PruneConfig.for_hidden(ecfg.n_hidden),
+        drift=drift_mod.DriftConfig(),
     )
 
 
@@ -191,16 +204,14 @@ def train_step(
 class ServeState(NamedTuple):
     caches: dict
     pos: jnp.ndarray  # (B,) int32
-    odl: oselm.OSELMState  # fleet: one head per stream (leading B)
-    prune: pruning.PruneState  # fleet
+    odl: engine.EngineState  # fleet engine: elm/prune/drift/meter, leading B
 
 
 def init_serve_state(cfg: ModelConfig, batch: int, max_len: int) -> ServeState:
     return ServeState(
         caches=transformer.init_caches(cfg, batch, max_len),
         pos=jnp.zeros((batch,), jnp.int32),
-        odl=oselm.init_fleet(elm_config(cfg), batch),
-        prune=pruning.init_fleet(batch),
+        odl=engine.init_fleet(core_config(cfg), batch),
     )
 
 
@@ -210,31 +221,22 @@ def serve_step(
     token: jnp.ndarray,  # (B, 1) int32
     cfg: ModelConfig,
 ) -> tuple[jnp.ndarray, ServeState, dict]:
-    """One decode token + the paper's predict/gate on the stream features.
+    """One decode token + the fleet engine's predict/gate on stream features.
 
     Returns (logits (B, V), state', odl_out) where odl_out carries the
     per-stream prediction, confidence, and query_mask (True -> this stream
     must consult the teacher; labels applied later via serve_apply_labels).
+    The engine also runs the per-stream drift detector (a drifting stream is
+    forced to query — pruning condition 2) and meters query traffic.
     """
     hidden, new_caches = transformer.lm_decode_hidden(
         params, token, state.caches, state.pos, cfg
     )
     logits = transformer.lm_logits(params, hidden, cfg)[:, 0]
 
-    ecfg = elm_config(cfg)
-    pcfg = pruning.PruneConfig.for_hidden(ecfg.n_hidden)
     feats = hidden[:, 0].astype(jnp.float32)  # (B, d)
-    preds, outs = oselm.fleet_predict(state.odl, feats, ecfg)
-    conf = pruning.confidence(outs)
-    drift = jnp.zeros((token.shape[0],), jnp.bool_)
-    query_mask = pruning.fleet_should_query(
-        state.prune, outs, state.odl.count, drift, pcfg
-    )
-
-    new_state = ServeState(
-        caches=new_caches, pos=state.pos + 1, odl=state.odl, prune=state.prune
-    )
-    odl_out = {"pred": preds, "conf": conf, "query_mask": query_mask, "feats": feats}
+    new_odl, odl_out = engine.gate(state.odl, feats, core_config(cfg))
+    new_state = ServeState(caches=new_caches, pos=state.pos + 1, odl=new_odl)
     return logits, new_state, odl_out
 
 
@@ -246,15 +248,8 @@ def serve_apply_labels(
     cfg: ModelConfig,
 ) -> ServeState:
     """Asynchronous label acquisition: RLS-train the per-stream heads."""
-    ecfg = elm_config(cfg)
-    pcfg = pruning.PruneConfig.for_hidden(ecfg.n_hidden)
-    y = jax.nn.one_hot(labels, ecfg.n_out)
-    new_elm = oselm.fleet_update(state.odl, feats, y, ecfg, mask=mask.astype(jnp.float32))
-    preds, outs = oselm.fleet_predict(state.odl, feats, ecfg)
-    conf = pruning.confidence(outs)
-    agree = preds == labels
-    new_prune = pruning.fleet_update(state.prune, mask, agree, conf, pcfg)
-    return state._replace(odl=new_elm, prune=new_prune)
+    new_odl = engine.apply_labels(state.odl, feats, labels, mask, core_config(cfg))
+    return state._replace(odl=new_odl)
 
 
 # ---------------------------------------------------------------------------
@@ -272,8 +267,7 @@ def prefill(params: dict, tokens: jnp.ndarray, cfg: ModelConfig, max_len: Option
     state = ServeState(
         caches=caches,
         pos=pos,
-        odl=oselm.init_fleet(elm_config(cfg), b),
-        prune=pruning.init_fleet(b),
+        odl=engine.init_fleet(core_config(cfg), b),
     )
     return hidden, state
 
@@ -300,7 +294,7 @@ def _abstract_like(tree, axes_tree):
 
 def _axes_like(tree, fn):
     """Build an axes pytree with the same structure as `tree` via fn(path, leaf)."""
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     axes = [fn(tuple(str(k) for k in path), leaf) for path, leaf in flat]
     return jax.tree.unflatten(treedef, axes)
 
@@ -338,8 +332,7 @@ def abstract_serve_state(cfg: ModelConfig, batch: int, max_len: int) -> ServeSta
         return ("stream",) + (None,) * (leaf.ndim - 1)
 
     odl = _abstract_like(shapes.odl, _axes_like(shapes.odl, odl_axes))
-    prune = _abstract_like(shapes.prune, _axes_like(shapes.prune, odl_axes))
-    return ServeState(caches=caches, pos=pos, odl=odl, prune=prune)
+    return ServeState(caches=caches, pos=pos, odl=odl)
 
 
 def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()) -> TrainState:

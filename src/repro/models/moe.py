@@ -211,7 +211,7 @@ def moe_block_ep(x: jnp.ndarray, p: dict, cfg: ModelConfig, mesh):
 
     tok_spec = tok_axes
     xt_all = x.reshape(b * s, d)
-    y, aux = jax.shard_map(
+    y, aux = sharding.shard_map(
         local_moe,
         mesh=mesh,
         in_specs=(
@@ -222,7 +222,7 @@ def moe_block_ep(x: jnp.ndarray, p: dict, cfg: ModelConfig, mesh):
             P("model", None, None),
         ),
         out_specs=(P(tok_spec, None), P()),
-        check_vma=False,
+        check=False,
     )(xt_all, p["router"], p["wg"], p["wu"], p["wd"])
     y = y.reshape(b, s, d)
 

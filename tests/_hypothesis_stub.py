@@ -1,0 +1,35 @@
+"""Fallback when ``hypothesis`` is not installed: property tests skip,
+example-based tests in the same module still run.
+
+Usage (the four property-test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:  # degrade gracefully: only @given tests skip
+        from _hypothesis_stub import given, settings, st
+"""
+
+import pytest
+
+
+class _AnyStrategy:
+    """Accepts any strategies.<name>(...) chain at decoration time."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: _AnyStrategy()
+
+    def __call__(self, *a, **k):
+        return _AnyStrategy()
+
+
+st = _AnyStrategy()
+
+
+def settings(*args, **kwargs):
+    if args and callable(args[0]):  # bare @settings
+        return args[0]
+    return lambda f: f
+
+
+def given(*args, **kwargs):
+    return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)

@@ -101,8 +101,8 @@ def test_pipeline_matches_sequential():
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed import pipeline
 
-        mesh = jax.make_mesh((8,), ('stage',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import _make_mesh
+        mesh = _make_mesh((8,), ('stage',))
         n_stages, m, b, d = 8, 4, 2, 16
         key = jax.random.PRNGKey(0)
         h = jax.random.normal(key, (m, b, d))
