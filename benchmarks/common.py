@@ -1,15 +1,15 @@
-"""Shared harness for the paper-table benchmarks."""
+"""Shared harness for the paper-table benchmarks (engine-backed)."""
 
 from __future__ import annotations
 
-import functools
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import odl_head, oselm, pruning
+from repro import engine
+from repro.core import oselm, pruning
 from repro.data import har
 
 
@@ -23,7 +23,8 @@ def timer_us(fn, *args, warmup: int = 1, iters: int = 5) -> float:
 
 
 def boot_core(splits, run_seed: int, theta, n_hidden: int = 128, variant: str = "hash"):
-    """Initial-training boot of the paper's core (§3 steps 1-2)."""
+    """Initial-training boot of the paper's core (§3 steps 1-2); returns an
+    axis-free (single-head) engine state."""
     elm_cfg = oselm.OSELMConfig(
         n_in=har.N_FEATURES, n_hidden=n_hidden, n_out=har.N_CLASSES,
         variant=variant, seed=run_seed + 77, ridge=1e-2,
@@ -32,31 +33,43 @@ def boot_core(splits, run_seed: int, theta, n_hidden: int = 128, variant: str = 
         pcfg = pruning.PruneConfig(min_trained=max(n_hidden, 288))
     else:
         pcfg = pruning.PruneConfig(ladder=(float(theta),), min_trained=max(n_hidden, 288))
-    cfg = odl_head.ODLCoreConfig(elm=elm_cfg, prune=pcfg)
+    cfg = engine.EngineConfig(elm=elm_cfg, prune=pcfg)
     st0 = oselm.init_state_batch(
         elm_cfg, jnp.asarray(splits.train_x), jax.nn.one_hot(splits.train_y, har.N_CLASSES)
     )
-    return cfg, odl_head.init_state(cfg)._replace(elm=st0)
+    return cfg, engine.init_state(cfg)._replace(elm=st0)
 
 
 def drift_trial(run_seed: int, theta, n_hidden: int = 128, variant: str = "hash",
                 dataset_seed: int = 0):
-    """One full §3 protocol run; returns dict of accuracies + comm volume."""
+    """One full §3 protocol run; returns dict of accuracies + comm volume.
+
+    The retraining phase is a one-stream ``engine.run_fleet`` (the same
+    state machine the fleet/serving paths use at S=thousands).
+    """
     splits = har.generate(seed=dataset_seed)
     cfg, core = boot_core(splits, run_seed, theta, n_hidden, variant)
     ox, oy, tx, ty = har.odl_split(splits, 0.6, run_seed)
 
-    before = float(odl_head.accuracy(
-        core, jnp.asarray(splits.test0_x), jnp.asarray(splits.test0_y), cfg))
-    noodl_after = float(odl_head.accuracy(core, jnp.asarray(tx), jnp.asarray(ty), cfg))
+    fleet = engine.broadcast_streams(core, 1)
 
-    core, outs = jax.jit(functools.partial(odl_head.run_training_phase, cfg=cfg))(
-        core, jnp.asarray(ox), jnp.asarray(oy)
+    def acc(state, x, y):
+        return float(engine.fleet_accuracy(state, jnp.asarray(x), jnp.asarray(y), cfg)[0])
+
+    before = acc(fleet, splits.test0_x, splits.test0_y)
+    noodl_after = acc(fleet, tx, ty)
+
+    # Paper §3 step 3: new training phase (re-arm pruning condition 1).
+    fleet = fleet._replace(prune=pruning.reset_phase(fleet.prune))
+    fleet, _ = engine.run_fleet(
+        fleet, jnp.asarray(ox)[:, None], jnp.asarray(oy, jnp.int32)[:, None],
+        cfg, mode="train_phase",
     )
-    after = float(odl_head.accuracy(core, jnp.asarray(tx), jnp.asarray(ty), cfg))
-    comm = float(pruning.comm_volume_fraction(core.prune))
+    after = acc(fleet, tx, ty)
+    prune_one = jax.tree.map(lambda a: a[0], fleet.prune)
+    comm = float(pruning.comm_volume_fraction(prune_one))
     return dict(before=before, after=after, noodl_after=noodl_after, comm=comm,
-                queries=int(core.prune.queries), skips=int(core.prune.skips))
+                queries=int(prune_one.queries), skips=int(prune_one.skips))
 
 
 def mean_std(rows, key):

@@ -28,14 +28,14 @@ import jax.numpy as jnp
 
 from repro import engine
 from repro.core import drift as drift_mod
-from repro.core import odl_head, oselm, pruning
+from repro.core import oselm, pruning
 
 N_IN, N_HIDDEN, N_OUT = 64, 64, 6
 KERNEL_S_CAP = 256  # interpret-mode Pallas iterates the stream grid in Python
 
 
-def _cfg(use_kernel: bool = False) -> odl_head.ODLCoreConfig:
-    return odl_head.ODLCoreConfig(
+def _cfg(use_kernel: bool = False) -> engine.EngineConfig:
+    return engine.EngineConfig(
         elm=oselm.OSELMConfig(
             n_in=N_IN, n_hidden=N_HIDDEN, n_out=N_OUT, variant="hash",
             ridge=1e-2, use_kernel=use_kernel,

@@ -1,0 +1,168 @@
+"""Streaming runtime vs materialized run_fleet throughput.
+
+Measures stream-steps/second for T ticks of S concurrent ODL streams:
+
+  * ``run_fleet``  — the offline baseline: the whole (T, S, n_in) stream
+    materialized (np.stack + device transfer, timed — both runtimes are fed
+    the same host-side tick source, and run_fleet cannot start until the
+    full array exists), then one jit dispatch per chunk (same-tick labels).
+  * ``stream``     — ``engine.stream.run`` fed one tick at a time from an
+    iterator, with a ``LatencyTeacher`` answering after 0 / 4 / 16 ticks:
+    per-tick fused learn+plan dispatches, pending-query ring,
+    double-buffered host ingestion.  At latency 0 the two produce
+    bit-identical state (tests/test_stream.py); the interesting number is
+    how little the per-tick dispatch + teacher round-trip costs.
+
+Both sides report best-of-N wall time (the container's scheduling noise
+otherwise swamps the ~10% effect being measured).
+
+Writes BENCH_stream.json next to the repo root.
+
+Run:  PYTHONPATH=src python benchmarks/stream_bench.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine
+from repro.core import drift as drift_mod
+from repro.core import oselm, pruning
+from repro.engine import stream
+
+N_IN, N_HIDDEN, N_OUT = 64, 64, 6
+LATENCIES = (0, 4, 16)
+
+
+def _cfg() -> engine.EngineConfig:
+    return engine.EngineConfig(
+        elm=oselm.OSELMConfig(
+            n_in=N_IN, n_hidden=N_HIDDEN, n_out=N_OUT, variant="hash", ridge=1e-2
+        ),
+        prune=pruning.PruneConfig(min_trained=8),
+        drift=drift_mod.DriftConfig(),
+    )
+
+
+def _data(t, s, cfg):
+    kx, ky = jax.random.split(jax.random.PRNGKey(0))
+    xs = jnp.tanh(jax.random.normal(kx, (t, s, cfg.elm.n_in)))
+    ys = np.asarray(jax.random.randint(ky, (t, s), 0, cfg.elm.n_out), np.int32)
+    return xs, ys
+
+
+def _fleet_once(cfg, xs_host, ys):
+    t = len(xs_host)
+
+    def run(state):
+        # The offline path's first step IS materialization: assemble the
+        # (T, S, n_in) array from the host tick stream and ship it.
+        xs = jnp.asarray(np.stack(xs_host))
+        state, _ = engine.run_fleet(
+            state, xs, jnp.asarray(ys), cfg, mode="train_phase", chunk=t
+        )
+        return state.elm.beta
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(engine.init_fleet(cfg, xs_host[0].shape[0])))
+    return time.perf_counter() - t0
+
+
+def _stream_once(cfg, xs_host, ys, latency):
+    t = len(xs_host)
+    teacher = stream.LatencyTeacher(stream.array_labels(ys), latency=latency)
+    t0 = time.perf_counter()
+    state, _, stats = stream.run(
+        engine.init_fleet(cfg, xs_host[0].shape[0]),
+        (xs_host[i] for i in range(t)),
+        cfg, teacher, mode="train_phase", capacity=max(4 * latency, 8),
+        collect=False,
+    )
+    jax.block_until_ready(state.elm.beta)
+    return time.perf_counter() - t0, stats
+
+
+def bench_pair(cfg, xs, ys, latency, iters=8):
+    """Best-of-N for both sides, *interleaved* — the container's scheduling
+    drifts on a scale of seconds, so measuring the two sides back-to-back
+    within each iteration exposes them to the same machine state.  GC is
+    paused during the timed region (gen-2 collections over the per-tick
+    array churn otherwise inject multi-ms pauses into single iterations)."""
+    # Ticks arrive as host arrays (the streaming deployment story); the
+    # stream runtime ingests them tick by tick, the offline baseline
+    # stacks them into one array first.
+    xs_host = [np.asarray(x) for x in np.asarray(xs)]
+    _fleet_once(cfg, xs_host, ys)  # warmup (chunk runner compile)
+    _stream_once(cfg, xs_host, ys, latency)  # warmup (plan/learn/fused compile)
+    best_fleet = best_stream = float("inf")
+    best_stats = None
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(iters):
+            best_fleet = min(best_fleet, _fleet_once(cfg, xs_host, ys))
+            dt, stats = _stream_once(cfg, xs_host, ys, latency)
+            if dt < best_stream:
+                best_stream, best_stats = dt, stats
+    finally:
+        gc.enable()
+    return best_fleet, best_stream, best_stats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small sizes only (CI smoke)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.out is None:
+        name = "BENCH_stream_quick.json" if args.quick else "BENCH_stream.json"
+        args.out = str(pathlib.Path(__file__).resolve().parent.parent / name)
+
+    sizes = [(64, 64)] if args.quick else [(1024, 128)]
+    rows = []
+    print(f"== Streaming runtime throughput (n_in={N_IN}, N={N_HIDDEN}) ==")
+    for s, t in sizes:
+        cfg = _cfg()
+        xs, ys = _data(t, s, cfg)
+        steps = t * s
+
+        print(f"S={s:5d} T={t:3d}:")
+        for lat in LATENCIES:
+            dt_fleet, dt_s, stats = bench_pair(cfg, xs, ys, lat)
+            base_sps = steps / dt_fleet
+            sps = steps / dt_s
+            rows.append({
+                "streams": s,
+                "ticks": t,
+                "n_hidden": N_HIDDEN,
+                "teacher_latency_ticks": lat,
+                "run_fleet_steps_per_s": base_sps,
+                "stream_steps_per_s": sps,
+                "stream_vs_run_fleet": sps / base_sps,
+                "tick_p50_ms": stats.tick_p50_ms,
+                "tick_p95_ms": stats.tick_p95_ms,
+                "labels_applied": stats.labels_applied,
+                "queries_issued": stats.queries_issued,
+                "tickets_dropped": stats.tickets_dropped,
+            })
+            print(f"  lat={lat:2d}: run_fleet {base_sps:>11,.0f} sps | "
+                  f"stream {sps:>11,.0f} sps ({100 * sps / base_sps:5.1f}%) | "
+                  f"tick p50/p95 {stats.tick_p50_ms:.2f}/{stats.tick_p95_ms:.2f} ms | "
+                  f"labels {stats.labels_applied}/{stats.queries_issued}")
+
+    out = {"bench": "stream", "backend": jax.default_backend(), "rows": rows}
+    pathlib.Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,20 +1,23 @@
-"""Full Algorithm-1 demo: the drift detector switches modes on its own.
+"""Full Algorithm-1 demo on the streaming runtime: ticks arrive one at a
+time, teacher answers arrive late.
 
 A sensor stream starts with known-subject data (predicting mode), then the
 distribution shifts to the held-out subjects.  The core detects the drift,
 enters training mode, acquires labels through the auto-pruned teacher
-channel, converges, and drops back to predicting mode — the complete loop
-of the paper's Fig. 2/Algorithm 1, plus the Fig. 4 power accounting.
+channel — here an *asynchronous* teacher with real latency — converges,
+and drops back to predicting mode: the complete loop of the paper's
+Fig. 2/Algorithm 1, plus the Fig. 4 power accounting.
 
 Part two scales the same loop to a fleet: S users hit the drift at
-different severities, and ``repro.engine.run_fleet`` runs every stream's
-detector/pruner/head in one fused scan (this is the path the serving
-cascade uses at thousands of streams).
+different severities and a laggy, jittery teacher answers out of order
+while ``repro.engine.stream.run`` keeps every stream's detector/pruner/
+head moving (this is the path the serving cascade uses at thousands of
+streams); ``engine.run_fleet`` runs the same ticks as one fused offline
+scan for the throughput comparison.
 
 Run:  PYTHONPATH=src python examples/har_drift_demo.py
 """
 
-import functools
 import time
 
 import jax
@@ -22,37 +25,41 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import engine
-from repro.core import drift, odl_head, oselm, power_model, pruning
+from repro.core import drift, oselm, power_model, pruning
 from repro.data import har
+from repro.engine import stream
+
+CALM = 400
 
 
 def main():
     data = har.generate(seed=0)
     elm = oselm.OSELMConfig(n_in=561, n_hidden=128, n_out=6, variant="hash")
-    cfg = odl_head.ODLCoreConfig(
+    cfg = engine.EngineConfig(
         elm=elm,
         prune=pruning.PruneConfig.for_hidden(128),
         drift=drift.DriftConfig(warmup=48, k_sigma=3.0, enter_hits=2, exit_calm=64),
     )
-    core = odl_head.init_state(cfg)._replace(
+    core = engine.init_state(cfg)._replace(
         elm=oselm.init_state_batch(
             elm, jnp.asarray(data.train_x), jax.nn.one_hot(data.train_y, 6)
         )
     )
 
-    # Stream: calm known-subject segment, then a hard shift (scaled features).
-    calm_x, calm_y = data.test0_x[:400], data.test0_y[:400]
-    ox, oy, tx, ty = har.odl_split(data, 0.6, seed=0)
-    shift_x = np.clip(ox * 2.0 + 0.8, -3, 3)
-    xs = jnp.asarray(np.concatenate([calm_x, shift_x]))
-    ys = jnp.asarray(np.concatenate([calm_y, oy]).astype(np.int32))
+    # ---- Part one: one stream, zero-latency teacher (the paper's loop). ---
+    ticks, labels = har.drift_tick_stream(
+        data, n_streams=1, seed=0, calm=CALM, severities=[2.0]
+    )
+    t_total = len(labels)
+    teacher = stream.LatencyTeacher(stream.array_labels(labels), latency=0)
+    st, outs, _ = stream.run(
+        engine.broadcast_streams(core, 1), ticks, cfg, teacher, mode="algo1"
+    )
 
-    core2, outs = jax.jit(functools.partial(odl_head.run_stream, cfg=cfg))(core, xs, ys)
-
-    training = np.asarray(outs.mode_training)
-    queried = np.asarray(outs.queried)
+    training = outs.mode_training[:, 0]
+    queried = outs.queried[:, 0]
     first_train = int(training.argmax()) if training.any() else -1
-    print(f"stream length          : {len(xs)} samples (shift at {len(calm_x)})")
+    print(f"stream length          : {t_total} samples (shift at {CALM})")
     print(f"drift detected at      : sample {first_train}")
     print(f"training-mode samples  : {int(training.sum())}")
     print(f"teacher queries        : {int(queried.sum())} "
@@ -66,42 +73,58 @@ def main():
         print(f"power @ 1 ev/{period:>4.0f}s     : {mw:6.3f} mW "
               f"({red:4.1f}% saved vs no pruning)")
 
-    # ---- Fleet mode: S users, drift severity varies per user. -------------
+    # ---- Part two: fleet of S streams, laggy out-of-order teacher. --------
     n_streams = 8
     severities = np.linspace(1.2, 2.6, n_streams)
-    fleet_xs = np.stack(
-        [
-            np.concatenate([calm_x, np.clip(ox * s + 0.4 * s, -3, 3)])
-            for s in severities
-        ],
-        axis=1,
-    )  # (T, S, n_in)
-    fleet_ys = np.broadcast_to(np.asarray(ys)[:, None], fleet_xs.shape[:2])
-    fstate = engine.broadcast_streams(core, n_streams)
-    fleet_xs, fleet_ys = jnp.asarray(fleet_xs), jnp.asarray(fleet_ys)
+    ticks, labels = har.drift_tick_stream(
+        data, n_streams=n_streams, seed=0, calm=CALM, severities=severities
+    )
+    fstate0 = engine.broadcast_streams(core, n_streams)
+    lag_teacher = stream.LatencyTeacher(
+        stream.array_labels(labels), latency=3, jitter=4, seed=1
+    )
+    fstate, fouts, stats = stream.run(
+        fstate0, ticks, cfg, lag_teacher, mode="algo1", capacity=32
+    )
 
-    # Warm up the chunk executable so the throughput line measures the scan,
-    # not jit compilation.
+    print(f"\nfleet of {n_streams} streams    : {stats.steps_per_s:,.0f} stream-steps/s "
+          f"(streaming, teacher latency 3+U[0,4] ticks)")
+    print(f"tick latency           : p50 {stats.tick_p50_ms:.2f} ms, "
+          f"p95 {stats.tick_p95_ms:.2f} ms")
+    print(f"label latency          : p50 {stats.label_latency_p50:.0f} ticks, "
+          f"p95 {stats.label_latency_p95:.0f} ticks; "
+          f"{stats.labels_applied}/{stats.queries_issued} queries answered, "
+          f"{stats.tickets_dropped} tickets dropped")
+    for s in range(n_streams):
+        tr = fouts.mode_training[:, s]
+        det = int(tr.argmax()) if tr.any() else -1
+        prune_s = jax.tree.map(lambda a: a[s], fstate.prune)
+        print(f"  stream {s} (x{severities[s]:.1f} shift): drift at {det:4d}, "
+              f"queries {int(fstate.prune.queries[s]):4d}, "
+              f"comm {float(pruning.comm_volume_fraction(prune_s)):.2f}")
+
+    # Offline comparison: the same ticks as one fused, chunked scan.
+    ticks2, labels2 = har.drift_tick_stream(
+        data, n_streams=n_streams, seed=0, calm=CALM, severities=severities
+    )
+    fleet_xs = jnp.asarray(np.stack(list(ticks2)))
+    fleet_ys = jnp.asarray(labels2)
+    # Fresh state per run_fleet call: off-CPU, run_fleet donates its input
+    # buffers, so the warmup must not consume the timed call's state.
     jax.block_until_ready(
-        engine.run_fleet(fstate, fleet_xs[:256], fleet_ys[:256], cfg,
+        engine.run_fleet(engine.broadcast_streams(core, n_streams),
+                         fleet_xs[:256], fleet_ys[:256], cfg,
                          mode="algo1", chunk=256)[0].elm.beta
     )
     t0 = time.perf_counter()
-    fstate, fouts = engine.run_fleet(
-        fstate, fleet_xs, fleet_ys, cfg, mode="algo1", chunk=256,
+    off_state, _ = engine.run_fleet(
+        engine.broadcast_streams(core, n_streams), fleet_xs, fleet_ys, cfg,
+        mode="algo1", chunk=256
     )
-    jax.block_until_ready(fstate.elm.beta)
+    jax.block_until_ready(off_state.elm.beta)
     dt = time.perf_counter() - t0
-    sps = fleet_xs.shape[0] * n_streams / dt
-
-    print(f"\nfleet of {n_streams} streams   : {sps:,.0f} stream-steps/s "
-          f"(one fused scan, chunk=256)")
-    ftraining = np.asarray(fouts.mode_training)
-    for s in range(n_streams):
-        det = int(ftraining[:, s].argmax()) if ftraining[:, s].any() else -1
-        print(f"  stream {s} (x{severities[s]:.1f} shift): drift at {det:4d}, "
-              f"queries {int(fstate.prune.queries[s]):4d}, "
-              f"comm {float(pruning.comm_volume_fraction(jax.tree.map(lambda a: a[s], fstate.prune))):.2f}")
+    print(f"\noffline run_fleet      : {fleet_xs.shape[0] * n_streams / dt:,.0f} "
+          f"stream-steps/s (one fused scan, chunk=256)")
 
 
 if __name__ == "__main__":

@@ -4,15 +4,17 @@ Trains an ODLHash core (n=561, N=128, m=6) on the HAR surrogate, hits it
 with the subject drift, retrains online with auto data pruning, and prints
 the accuracy recovery + communication saving (paper Fig. 3 'Auto').
 
+The whole loop runs on ``repro.engine`` — the same batched state machine
+that serves thousands of streams — here as a fleet of exactly one.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import odl_head, oselm, pruning
+from repro import engine
+from repro.core import oselm, pruning
 from repro.data import har
 
 
@@ -20,34 +22,40 @@ def main():
     data = har.generate(seed=0)
 
     elm = oselm.OSELMConfig(n_in=561, n_hidden=128, n_out=6, variant="hash")
-    cfg = odl_head.ODLCoreConfig(elm=elm, prune=pruning.PruneConfig.for_hidden(128))
+    cfg = engine.EngineConfig(elm=elm, prune=pruning.PruneConfig.for_hidden(128))
 
-    # Initial training (paper §3 step 1): classic OS-ELM batch boot.
-    core = odl_head.init_state(cfg)._replace(
+    # Initial training (paper §3 step 1): classic OS-ELM batch boot, then
+    # broadcast to a one-stream fleet.
+    core = engine.init_state(cfg)._replace(
         elm=oselm.init_state_batch(
             elm, jnp.asarray(data.train_x), jax.nn.one_hot(data.train_y, 6)
         )
     )
-    acc = lambda c, x, y: float(
-        odl_head.accuracy(c, jnp.asarray(x), jnp.asarray(y), cfg)
+    fleet = engine.broadcast_streams(core, 1)
+    acc = lambda st, x, y: float(
+        engine.fleet_accuracy(st, jnp.asarray(x), jnp.asarray(y), cfg)[0]
     )
-    print(f"before drift (test0): {100*acc(core, data.test0_x, data.test0_y):.1f}%")
+    print(f"before drift (test0): {100*acc(fleet, data.test0_x, data.test0_y):.1f}%")
 
     # Drift: five held-out subjects (paper §3 steps 3-4).
     ox, oy, tx, ty = har.odl_split(data, frac=0.6, seed=0)
-    print(f"after drift, NO ODL : {100*acc(core, tx, ty):.1f}%")
+    print(f"after drift, NO ODL : {100*acc(fleet, tx, ty):.1f}%")
 
-    # Supervised ODL with auto data pruning over the drifted stream.
-    core, outs = jax.jit(functools.partial(odl_head.run_training_phase, cfg=cfg))(
-        core, jnp.asarray(ox), jnp.asarray(oy)
+    # Supervised ODL with auto data pruning over the drifted stream: re-arm
+    # the pruning phase counter, then scan the retraining phase.
+    fleet = fleet._replace(prune=pruning.reset_phase(fleet.prune))
+    fleet, outs = engine.run_fleet(
+        fleet, jnp.asarray(ox)[:, None], jnp.asarray(oy, jnp.int32)[:, None],
+        cfg, mode="train_phase",
     )
-    comm = float(pruning.comm_volume_fraction(core.prune))
-    print(f"after drift, ODL    : {100*acc(core, tx, ty):.1f}%")
-    print(f"teacher queries     : {int(core.prune.queries)}/{len(ox)} "
+    head = engine.stream_slice(fleet, 0)
+    comm = float(pruning.comm_volume_fraction(head.prune))
+    print(f"after drift, ODL    : {100*acc(fleet, tx, ty):.1f}%")
+    print(f"teacher queries     : {int(head.prune.queries)}/{len(ox)} "
           f"({100*comm:.1f}% comm volume, {100*(1-comm):.1f}% saved)")
-    print(f"bytes to teacher    : {int(core.meter.up_bytes):,} "
-          f"(saved {int((1/comm - 1) * core.meter.up_bytes):,})")
-    print(f"final auto-theta    : {float(pruning.theta_of(core.prune, cfg.prune)):.2f}")
+    print(f"bytes to teacher    : {int(head.meter.up_bytes):,} "
+          f"(saved {int((1/comm - 1) * head.meter.up_bytes):,})")
+    print(f"final auto-theta    : {float(pruning.theta_of(head.prune, cfg.prune)):.2f}")
 
 
 if __name__ == "__main__":

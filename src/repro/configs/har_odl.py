@@ -4,19 +4,20 @@ OS-ELM core with n=561, N=128, m=6 (paper §2.3 prototype), ODLHash variant,
 auto data pruning with the {1, .64, .32, .16, .08} ladder and X=10.
 """
 
-from repro.core import drift, odl_head, oselm, pruning
+from repro import engine
+from repro.core import drift, oselm, pruning
 
 
-def full(n_hidden: int = 128, variant: str = "hash") -> odl_head.ODLCoreConfig:
+def full(n_hidden: int = 128, variant: str = "hash") -> engine.EngineConfig:
     elm = oselm.OSELMConfig(
         n_in=561, n_hidden=n_hidden, n_out=6, variant=variant, ridge=1e-2
     )
-    return odl_head.ODLCoreConfig(
+    return engine.EngineConfig(
         elm=elm,
         prune=pruning.PruneConfig.for_hidden(n_hidden),
         drift=drift.DriftConfig(),
     )
 
 
-def smoke() -> odl_head.ODLCoreConfig:
+def smoke() -> engine.EngineConfig:
     return full(n_hidden=16)

@@ -6,7 +6,8 @@ Submodules:
   pruning      — P1P2 confidence metric + auto-theta ladder controller
   drift        — lightweight EWMA drift detector (mode switching)
   labels       — teacher query protocol + communication metering
-  odl_head     — Algorithm 1 composed; fleet/vmap helpers
+  odl_head     — DEPRECATED alias of repro.engine.scalar (Algorithm 1 now
+                 lives in repro/engine; kept for the paper-repro tests)
   memory_model — paper Table 1/2 analytic memory & parameter model
   power_model  — paper Table 4 / Fig. 4 timing & power model
 """

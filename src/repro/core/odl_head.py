@@ -1,194 +1,31 @@
-"""The paper's top-level ODL loop (Algorithm 1) — scalar S=1 shim.
+"""DEPRECATED alias — the scalar ODL API lives in ``repro.engine.scalar``.
 
-The actual state machine lives in ``repro/engine`` (the batched fleet
-engine); this module keeps the original single-stream API for the
-paper-repro tests and small examples by adding a leading stream axis of 1,
-delegating to ``engine.fleet_step`` / ``engine.run_fleet``, and stripping
-the axis again.  Semantics are bit-identical per stream; new code that
-handles more than one stream should use ``repro.engine`` directly (this
-scalar API is deprecated for fleet work — see ROADMAP "Open items").
+This module completes the ROADMAP deprecation path: PR 1 turned it into an
+S=1 shim over the fleet engine; this PR folds the implementation into
+``repro/engine`` and leaves this documented alias so the paper-repro tests
+(and any external notebooks pinned to the original import path) keep
+working.  Nothing else in this repository may import it — enforced by
+``tests/test_stream.py::test_scalar_api_confined_to_engine``.
 
-``ODLCoreConfig`` / ``ODLCoreState`` / ``StepOutput`` are defined here (the
-lowest layer) and re-exported by the engine as ``EngineConfig`` /
-``EngineState`` / ``FleetStepOutput``: the same pytrees serve both the
-scalar and the fleet view, so existing checkpoints and configs keep working.
-The engine import is deferred to call time to keep ``repro.core`` importable
-on its own.
+Use instead:
+  * fleets / serving:  ``repro.engine`` — ``init_fleet`` / ``run_fleet`` /
+    ``gate`` + ``apply_labels`` / ``stream.run`` (async teacher runtime)
+  * single stream:     ``repro.engine.scalar`` — this exact API, same names
+
+``ODLCoreConfig`` / ``ODLCoreState`` / ``StepOutput`` are the engine's own
+``EngineConfig`` / ``EngineState`` / ``FleetStepOutput`` classes (see
+``engine/types.py``), so states built through either name are identical
+pytrees: checkpoints and configs round-trip across the rename.
 """
 
-from __future__ import annotations
-
-import dataclasses
-from typing import Callable, NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import drift as drift_mod
-from repro.core import labels as labels_mod
-from repro.core import oselm, pruning
-
-
-@dataclasses.dataclass(frozen=True)
-class ODLCoreConfig:
-    """ODL configuration (identical semantics for S = 1 and a fleet)."""
-
-    elm: oselm.OSELMConfig = oselm.OSELMConfig()
-    prune: pruning.PruneConfig = None  # type: ignore[assignment]
-    drift: drift_mod.DriftConfig = drift_mod.DriftConfig()
-
-    def __post_init__(self):
-        if self.prune is None:
-            object.__setattr__(
-                self, "prune", pruning.PruneConfig.for_hidden(self.elm.n_hidden)
-            )
-
-
-class ODLCoreState(NamedTuple):
-    """elm/prune/drift/meter; scalar leaves here, leading-S leaves in the
-    fleet engine (which aliases this class as ``EngineState``)."""
-
-    elm: oselm.OSELMState
-    prune: pruning.PruneState
-    drift: drift_mod.DriftState
-    meter: labels_mod.CommMeter
-
-
-class StepOutput(NamedTuple):
-    pred: jnp.ndarray  # int32 local predicted class c
-    outputs: jnp.ndarray  # (.., m) raw outputs O
-    queried: jnp.ndarray  # bool
-    trained: jnp.ndarray  # bool
-    theta: jnp.ndarray  # f32 current threshold
-    confidence: jnp.ndarray  # f32 p1 - p2
-    mode_training: jnp.ndarray  # bool
-
-
-def _engine():
-    from repro.engine import fleet  # deferred: engine sits above core
-
-    return fleet
-
-
-def init_state(cfg: ODLCoreConfig) -> ODLCoreState:
-    return ODLCoreState(
-        elm=oselm.init_state(cfg.elm),
-        prune=pruning.init_state(),
-        drift=drift_mod.init_state(),
-        meter=labels_mod.CommMeter.zero(),
-    )
-
-
-def _expand(tree):
-    """Scalar state/arrays -> fleet of one stream (leading axis 1)."""
-    return jax.tree.map(lambda a: jnp.asarray(a)[None], tree)
-
-
-def _squeeze(tree):
-    return jax.tree.map(lambda a: a[0], tree)
-
-
-def _scalar_step(
-    state: ODLCoreState,
-    x: jnp.ndarray,
-    idx: jnp.ndarray,
-    teacher: Callable,
-    cfg: ODLCoreConfig,
-    mode: str,
-    teacher_available: Optional[jnp.ndarray],
-    drift_active: Optional[jnp.ndarray],
-) -> tuple[ODLCoreState, StepOutput]:
-    t = teacher(idx, x)  # always traced (static shapes), used only if queried
-    fstate, fout = _engine().fleet_step(
-        _expand(state),
-        x[None],
-        jnp.asarray(t, jnp.int32)[None],
-        cfg,
-        mode=mode,
-        teacher_available=None if teacher_available is None else _expand(teacher_available),
-        drift_active=None if drift_active is None else _expand(drift_active),
-    )
-    return _squeeze(fstate), _squeeze(fout)
-
-
-def train_phase_step(
-    state: ODLCoreState,
-    x: jnp.ndarray,
-    idx: jnp.ndarray,
-    teacher: Callable,
-    cfg: ODLCoreConfig,
-    drift_active: Optional[jnp.ndarray] = None,
-    teacher_available: Optional[jnp.ndarray] = None,
-) -> tuple[ODLCoreState, StepOutput]:
-    """One sample of the paper's retraining phase (pruning always armed).
-
-    ``drift_active`` models pruning condition 2 (default: not detected).
-    ``teacher_available`` models the paper's retry-or-skip fault policy: when
-    False the query is suppressed *and* no training happens this step.
-    """
-    return _scalar_step(
-        state, x, idx, teacher, cfg, "train_phase", teacher_available, drift_active
-    )
-
-
-def step(
-    state: ODLCoreState,
-    x: jnp.ndarray,
-    idx: jnp.ndarray,
-    teacher: Callable,
-    cfg: ODLCoreConfig,
-) -> tuple[ODLCoreState, StepOutput]:
-    """Full Algorithm 1: drift detector switches predicting <-> training."""
-    return _scalar_step(state, x, idx, teacher, cfg, "algo1", None, None)
-
-
-def run_training_phase(
-    state: ODLCoreState,
-    xs: jnp.ndarray,  # (T, n_in)
-    teacher_labels: jnp.ndarray,  # (T,) int32
-    cfg: ODLCoreConfig,
-    teacher_available: Optional[jnp.ndarray] = None,  # (T,) bool
-) -> tuple[ODLCoreState, StepOutput]:
-    """Scan the retraining phase over a stream (paper §3 step 3) — a one-
-    stream ``engine.run_fleet``.
-
-    Condition 1 is lifetime trained count — initial training (step 1) already
-    satisfies max(N, 288), so pruning is armed from the first stream sample,
-    exactly as required to reproduce Fig. 3/4 (see should_query docstring).
-    """
-    state = state._replace(prune=pruning.reset_phase(state.prune))
-    avail = None if teacher_available is None else teacher_available[:, None]
-    fstate, fouts = _engine().run_fleet(
-        _expand(state),
-        xs[:, None],
-        jnp.asarray(teacher_labels, jnp.int32)[:, None],
-        cfg,
-        mode="train_phase",
-        teacher_available=avail,
-    )
-    return _squeeze(fstate), jax.tree.map(lambda a: a[:, 0], fouts)
-
-
-def run_stream(
-    state: ODLCoreState,
-    xs: jnp.ndarray,
-    teacher_labels: jnp.ndarray,
-    cfg: ODLCoreConfig,
-) -> tuple[ODLCoreState, StepOutput]:
-    """Scan the full Algorithm-1 ``step`` over a stream (one-stream fleet)."""
-    fstate, fouts = _engine().run_fleet(
-        _expand(state),
-        xs[:, None],
-        jnp.asarray(teacher_labels, jnp.int32)[:, None],
-        cfg,
-        mode="algo1",
-    )
-    return _squeeze(fstate), jax.tree.map(lambda a: a[:, 0], fouts)
-
-
-def accuracy(
-    state: ODLCoreState, xs: jnp.ndarray, ys: jnp.ndarray, cfg: ODLCoreConfig
-) -> jnp.ndarray:
-    """Batch test accuracy of the current head."""
-    preds, _ = oselm.predict(state.elm, xs, cfg.elm)
-    return jnp.mean((preds == ys).astype(jnp.float32))
+from repro.engine.scalar import (  # noqa: F401
+    ODLCoreConfig,
+    ODLCoreState,
+    StepOutput,
+    accuracy,
+    init_state,
+    run_stream,
+    run_training_phase,
+    step,
+    train_phase_step,
+)

@@ -115,6 +115,7 @@ def update(
     agree: jnp.ndarray,  # bool — c == t (only meaningful when queried)
     conf: jnp.ndarray,  # f32 — p1 - p2 of this sample
     cfg: PruneConfig,
+    theta: jnp.ndarray = None,  # threshold the decision was made against
 ) -> PruneState:
     """Auto-theta transition (paper §2.2, verbatim):
 
@@ -124,9 +125,16 @@ def update(
     A query forced for other reasons (warm-up, drift) with high confidence
     still counts as a success via the first clause; a *forced* query that
     disagrees only raises theta when the sample was genuinely low-confidence.
+
+    ``theta`` defaults to the current ladder value; a caller applying a
+    *deferred* teacher answer (the streaming runtime) passes the theta that
+    was in force when the query was issued, so a label delayed past a
+    ladder step is still judged against the decision it belongs to.
     """
     n_levels = len(cfg.ladder)
-    high = conf > theta_of(state, cfg)
+    if theta is None:
+        theta = theta_of(state, cfg)
+    high = conf > theta
     low_query = jnp.logical_and(queried, jnp.logical_not(high))
     success = jnp.logical_or(high, jnp.logical_and(low_query, agree))
     mismatch = jnp.logical_and(low_query, jnp.logical_not(agree))

@@ -1,15 +1,15 @@
 """repro.engine — fleet-scale ODL: Algorithm 1 batched over streams.
 
-This package owns the scalable serving substrate for the paper's ODL core
-(OS-ELM + P1P2 auto-pruning + drift gating).  Where ``core/odl_head.py``
-expresses Algorithm 1 for ONE stream (and is now a thin ``S = 1`` shim kept
-for the paper-repro tests), the engine runs the same state machine for a
-whole fleet of independent streams in one fused, jitted step.
+This package is the single owner of the paper's ODL state machine (OS-ELM
++ P1P2 auto-pruning + drift gating) at every scale: the S=1 paper repro
+(``engine.scalar``, re-exported by the deprecated ``core/odl_head.py``
+alias), the offline batched fleet (``run_fleet``), and the online
+streaming deployment with a laggy teacher (``engine.stream``).
 
 State layout
 ------------
-``EngineState`` is a single pytree with a leading stream axis ``S`` on every
-leaf::
+``EngineState`` (``engine/types.py``) is a single pytree with a leading
+stream axis ``S`` on every leaf::
 
     EngineState
     ├── elm:   OSELMState   beta (S, N, m) · P (S, N, N) · count (S,)
@@ -17,13 +17,18 @@ leaf::
     ├── drift: DriftState   mean/var/steps/hits/calm/active (S,)
     └── meter: CommMeter    up_bytes/down_bytes (S,)
 
-One ``fleet_step(state, x: (S, n_in), labels: (S,))`` performs
-predict → confidence → drift update → should_query → masked rank-1 RLS for
-all S streams with batched linear algebra (one hidden-projection matmul and
-einsum-batched Woodbury updates — no per-stream Python, no vmapped k×k
-solves).  With ``cfg.elm.use_kernel`` the RLS update routes through the
-fused Pallas kernel (``kernels/oselm_update.oselm_rls_update_fleet``), which
-reads each P tile once for both the downdate and the beta update.
+One tick, split at the teacher round-trip
+-----------------------------------------
+``plan(state, x: (S, n_in))`` performs predict → confidence → drift update
+→ should_query for all S streams (one hidden-projection matmul, everything
+else elementwise), charges the comm meter, and accounts the pruning
+ladder's skip events.  ``learn(state, h, labels, pred, conf, mask, ...)``
+later applies teacher answers: masked einsum-batched rank-1 Woodbury RLS
+(optionally the fused Pallas kernel via ``cfg.elm.use_kernel``) plus the
+ladder transition for the answered queries — against the *plan-time*
+features, so answers may arrive ticks later and out of order.
+``fleet_step`` is exactly ``learn`` composed on ``plan`` (a zero-latency
+teacher) and stays the offline single-dispatch tick.
 
 Chunked time scan
 -----------------
@@ -31,13 +36,29 @@ Chunked time scan
 over time inside jit, in chunks of ``chunk`` ticks: a Python loop dispatches
 one donated jit call per chunk (``donate_argnums=0`` — P, the dominant
 buffer at S·N²·4 bytes, is updated in place on TPU), and each chunk's
-compiled executable is cached per ``(cfg, mode, chunk shape)`` so chunk
-boundaries never recompile.  T×S stream-steps therefore cost T/chunk
-dispatches total instead of T×S per-sample Python overhead.
+compiled executable is cached per ``(cfg, mode, chunk shape)`` in a
+*bounded* LRU (``fleet.RUNNER_CACHE_SIZE``; hit/miss counters via
+``fleet.runner_cache_info`` / ``stream.cache_stats``) so chunk boundaries
+never recompile and long-lived servers never leak executables.
+
+Streaming runtime & teacher protocol
+------------------------------------
+``stream.run(state, ticks, cfg, teacher)`` drives the same state machine
+from an *iterator* of (S, n_in) ticks — nothing materializes over T.  A
+``stream.Teacher`` (``ask(feats, mask, tick) -> ticket`` /
+``poll(tick) -> [TeacherReply]`` / ``in_flight()``) answers with real
+latency; ``stream.LatencyTeacher`` models latency, jitter, loss, and
+permanent outage.  In-flight tickets wait in a fixed-capacity
+``PendingRing`` (overflow drops the oldest, metered), answers apply out of
+order through masked ``learn``, and host ingestion of tick t+1 overlaps
+device compute of tick t (double buffering).  ``StreamStats`` reports
+p50/p95 tick latency, label latency in ticks, and drop/orphan/loss
+counters.  With a zero-latency teacher the runtime reproduces
+``run_fleet`` bit-for-bit (locked by ``tests/test_stream.py``).
 
 Sharding
 --------
-Every ``fleet_step`` constrains the leading axis of all state leaves to the
+Every step constrains the leading axis of all state leaves to the
 ``"stream"`` logical axis (``distributed/sharding.py``), which the default
 rule table maps to ``("pod", "data")`` — under an active mesh the fleet
 splits across devices with zero cross-stream communication.
@@ -51,22 +72,31 @@ Modes
   retraining phase, pruning always armed, optional per-stream
   ``teacher_available`` outage modelling.
 
-Serving entry points (``gate`` / ``apply_labels``) split one step at the
-label round-trip: ``gate`` predicts and decides which streams must consult
-the teacher (charging the comm meter); ``apply_labels`` later applies the
-teacher's answers with the same masked RLS update.  ``models/model.py``'s
-serve path and ``launch/serve.py`` run on these.
+Serving entry points (``gate`` / ``apply_labels``) remain for callers that
+carry their own features (``models/model.py``'s decode loop feeds backbone
+hidden states); ``launch/serve.py`` runs them against the same Teacher
+protocol and PendingRing as the stream runtime.
 """
 
 from repro.engine.fleet import (  # noqa: F401
     EngineConfig,
     EngineState,
     FleetStepOutput,
+    PlanOutput,
     apply_labels,
     broadcast_streams,
+    fleet_accuracy,
     fleet_step,
     gate,
     init_fleet,
+    init_state,
+    learn,
+    plan,
     run_fleet,
+    runner_cache_info,
     stream_slice,
 )
+
+# fleet must import first: its repro.core imports resolve the
+# core -> odl_head(alias) -> engine.scalar cycle before scalar/stream load.
+from repro.engine import scalar, stream  # noqa: E402,F401

@@ -7,33 +7,43 @@ Design rules:
     to (S,) arrays unchanged — no vmap anywhere on the hot path;
   * the only matmuls are one (S, n_in) @ alpha hidden projection and the
     einsum-batched rank-1 Woodbury update (optionally the fused Pallas
-    kernel via ``cfg.elm.use_kernel``).
+    kernel via ``cfg.elm.use_kernel``);
+  * one tick is split at the teacher round-trip: ``plan`` (predict, drift,
+    query decision, comm metering) and ``learn`` (masked rank-1 RLS + the
+    auto-theta controller observing answered queries).  ``fleet_step`` is
+    exactly ``learn(plan(...))`` with same-tick labels, so the streaming
+    runtime (``engine/stream.py``), which runs the two halves as separate
+    dispatches with real teacher latency in between, degrades bit-for-bit
+    to ``run_fleet`` when the teacher answers instantly.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import drift as drift_mod
 from repro.core import labels as labels_mod
-from repro.core import odl_head as _head
 from repro.core import oselm, pruning
 from repro.distributed import sharding
+from repro.engine.types import (
+    EngineConfig,
+    EngineState,
+    FleetStepOutput,
+    init_state,
+)
 
-# The pytree/config classes are defined in core (lowest layer) so scalar and
-# fleet views share one type; the engine is the batched owner of their
-# semantics.  Leaves of an EngineState carry a leading stream axis S.
-EngineConfig = _head.ODLCoreConfig
-EngineState = _head.ODLCoreState
-FleetStepOutput = _head.StepOutput
+# How many compiled runners to keep alive per process.  A serving process
+# cycles through a handful of (cfg, mode, donate) combinations; unbounded
+# caching leaks one executable per combination forever (see ROADMAP PR-2).
+RUNNER_CACHE_SIZE = 32
 
 
 def init_fleet(cfg: EngineConfig, n_streams: int) -> EngineState:
-    return broadcast_streams(_head.init_state(cfg), n_streams)
+    return broadcast_streams(init_state(cfg), n_streams)
 
 
 def broadcast_streams(state: EngineState, n_streams: int) -> EngineState:
@@ -64,19 +74,42 @@ def _predict(state: EngineState, x: jnp.ndarray, cfg: EngineConfig):
     return h, jnp.argmax(o, axis=-1), o
 
 
-def fleet_step(
+class PlanOutput(NamedTuple):
+    """Everything the first half of a tick produces — including what must
+    survive the teacher round-trip so ``learn`` can apply labels later."""
+
+    h: jnp.ndarray  # (S, N) hidden activations at query time
+    pred: jnp.ndarray  # (S,) int32 local prediction c
+    outputs: jnp.ndarray  # (S, m) raw outputs O
+    confidence: jnp.ndarray  # (S,) f32 p1 - p2
+    queried: jnp.ndarray  # (S,) bool — streams shipping feats to the teacher
+    controller_on: jnp.ndarray  # (S,) bool — ladder observes this tick
+    theta: jnp.ndarray  # (S,) f32 threshold in force this tick
+    mode_training: jnp.ndarray  # (S,) bool
+
+
+def plan(
     state: EngineState,
     x: jnp.ndarray,  # (S, n_in)
-    labels: jnp.ndarray,  # (S,) int32 teacher answers (used only where queried)
     cfg: EngineConfig,
     mode: str = "algo1",
     teacher_available: Optional[jnp.ndarray] = None,  # (S,) bool
     drift_active: Optional[jnp.ndarray] = None,  # (S,) bool (train_phase only)
-) -> tuple[EngineState, FleetStepOutput]:
-    """One fused tick for all S streams: predict → confidence → drift →
-    should_query → masked rank-1 RLS.  Semantics per stream are exactly the
-    scalar Algorithm-1 ``step`` (mode='algo1') / §3 retraining
-    ``train_phase_step`` (mode='train_phase') of ``core/odl_head.py``.
+) -> tuple[EngineState, PlanOutput]:
+    """Teacher-facing half of one tick: predict → confidence → drift →
+    should_query, charge the comm meter for issued queries, and account the
+    pruning ladder's SKIP events (streams the controller observes but that
+    do not query — their success/streak transition needs no label).
+
+    ``elm`` passes through untouched; the committed state advances drift,
+    the per-phase counter reset on a drift rising edge, skip accounting,
+    and the meter.  Queried streams' ladder transitions wait for ``learn``.
+
+    Counter semantics under label loss: the meter charges bytes for every
+    *issued* query here, while ``prune.queries`` counts only *answered*
+    queries (incremented in ``learn``) — with a lossy teacher the two
+    deliberately diverge (``StreamStats.queries_issued`` tracks the former;
+    ``comm_volume_fraction`` reflects queries the controller observed).
     """
     if mode not in ("algo1", "train_phase"):
         raise ValueError(f"unknown engine mode {mode!r}")
@@ -113,31 +146,116 @@ def fleet_step(
         queried = want_query & teacher_available
         controller_on = teacher_available
 
-    y = labels_mod.one_hot(labels, cfg.elm.n_out)  # (S, m)
+    theta = pruning.theta_of(prune_st, cfg.prune)
     meter = state.meter.charge_query(x.shape[-1], queried)
-    agree = c == labels
-    new_elm = oselm.fleet_rank1_update_h(
-        state.elm, h, y, cfg.elm, mask=queried.astype(jnp.float32)
-    )
+    # Skip accounting happens now: a skipped sample's ladder transition uses
+    # only (conf > theta), never the teacher's answer (pruning.update with
+    # queried=False ignores ``agree``), so it must not wait for the label.
+    off = jnp.zeros((n_streams,), jnp.bool_)
     new_prune = _tree_where(
-        controller_on,
-        pruning.update(prune_st, queried, agree, conf, cfg.prune),
+        controller_on & jnp.logical_not(queried),
+        pruning.update(prune_st, off, off, conf, cfg.prune),
         prune_st,
     )
 
     new_state = sharding.constrain_fleet(
-        EngineState(elm=new_elm, prune=new_prune, drift=new_drift, meter=meter)
+        EngineState(elm=state.elm, prune=new_prune, drift=new_drift, meter=meter)
     )
-    out = FleetStepOutput(
+    out = PlanOutput(
+        h=h,
         pred=c,
         outputs=o,
-        queried=queried,
-        trained=queried,
-        theta=pruning.theta_of(prune_st, cfg.prune),
         confidence=conf,
+        queried=queried,
+        controller_on=controller_on,
+        theta=theta,
         mode_training=training,
     )
     return new_state, out
+
+
+def learn(
+    state: EngineState,
+    h: jnp.ndarray,  # (S, N) hidden activations captured at plan time
+    labels: jnp.ndarray,  # (S,) int32 teacher answers (valid where mask)
+    pred: jnp.ndarray,  # (S,) int32 plan-time local predictions
+    confidence: jnp.ndarray,  # (S,) f32 plan-time P1P2 confidence
+    mask: jnp.ndarray,  # (S,) bool — answered queries to apply
+    controller_on: jnp.ndarray,  # (S,) bool — plan-time controller gate
+    cfg: EngineConfig,
+    theta: Optional[jnp.ndarray] = None,  # (S,) plan-time threshold
+) -> EngineState:
+    """Deferred half of a tick: masked rank-1 RLS on the teacher's answers
+    plus the auto-theta ladder transition for the answered queries.
+
+    ``h`` / ``pred`` / ``confidence`` / ``theta`` are the plan-time values,
+    so a label arriving ticks later (or out of order) still trains on the
+    features it was asked about and is judged against the threshold the
+    query decision used — a disagreement on a low-confidence query steps
+    theta up even if other ticks moved the ladder while the answer was in
+    flight.  A stream outside ``mask`` is an exact identity.
+    """
+    y = labels_mod.one_hot(labels, cfg.elm.n_out)  # (S, m)
+    agree = pred == labels
+    new_elm = oselm.fleet_rank1_update_h(
+        state.elm, h, y, cfg.elm, mask=mask.astype(jnp.float32)
+    )
+    new_prune = _tree_where(
+        controller_on & mask,
+        pruning.update(state.prune, mask, agree, confidence, cfg.prune, theta=theta),
+        state.prune,
+    )
+    return sharding.constrain_fleet(
+        state._replace(elm=new_elm, prune=new_prune)
+    )
+
+
+def fleet_step(
+    state: EngineState,
+    x: jnp.ndarray,  # (S, n_in)
+    labels: jnp.ndarray,  # (S,) int32 teacher answers (used only where queried)
+    cfg: EngineConfig,
+    mode: str = "algo1",
+    teacher_available: Optional[jnp.ndarray] = None,  # (S,) bool
+    drift_active: Optional[jnp.ndarray] = None,  # (S,) bool (train_phase only)
+) -> tuple[EngineState, FleetStepOutput]:
+    """One fused tick for all S streams — ``learn`` composed directly on
+    ``plan`` (a zero-latency teacher).  Semantics per stream are exactly the
+    scalar Algorithm-1 ``step`` (mode='algo1') / §3 retraining
+    ``train_phase_step`` (mode='train_phase') of ``engine/scalar.py``.
+    """
+    state, p = plan(
+        state, x, cfg, mode=mode,
+        teacher_available=teacher_available, drift_active=drift_active,
+    )
+    state = learn(
+        state, p.h, labels, p.pred, p.confidence, p.queried, p.controller_on, cfg,
+        theta=p.theta,
+    )
+    out = FleetStepOutput(
+        pred=p.pred,
+        outputs=p.outputs,
+        queried=p.queried,
+        trained=p.queried,
+        theta=p.theta,
+        confidence=p.confidence,
+        mode_training=p.mode_training,
+    )
+    return state, out
+
+
+def fleet_accuracy(
+    state: EngineState,
+    xs: jnp.ndarray,  # (B, n_in) shared test batch
+    ys: jnp.ndarray,  # (B,) int32
+    cfg: EngineConfig,
+) -> jnp.ndarray:
+    """Per-stream test accuracy of every head against one shared batch:
+    one hidden projection, per-stream readout via einsum — returns (S,)."""
+    h = oselm.hidden(xs, cfg.elm)  # (B, N)
+    o = jnp.einsum("bn,snm->sbm", h, state.elm.beta)  # (S, B, m)
+    preds = jnp.argmax(o, axis=-1)  # (S, B)
+    return jnp.mean((preds == ys[None, :]).astype(jnp.float32), axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -145,12 +263,13 @@ def fleet_step(
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=RUNNER_CACHE_SIZE)
 def _chunk_runner(cfg: EngineConfig, mode: str, donate: bool):
     """One compiled executable per (cfg, mode, chunk shape): scans fleet_step
-    over a (chunk, S) block of ticks.  Cached so chunk boundaries reuse the
-    same jitted function (no recompile), and the state argument is donated
-    so P/beta update in place on accelerators."""
+    over a (chunk, S) block of ticks.  Cached (bounded LRU — a long-lived
+    server must not leak one executable per retired config) so chunk
+    boundaries reuse the same jitted function, and the state argument is
+    donated so P/beta update in place on accelerators."""
 
     def run_chunk(state, xs, labels, avail):
         def body(st, inp):
@@ -160,6 +279,20 @@ def _chunk_runner(cfg: EngineConfig, mode: str, donate: bool):
         return jax.lax.scan(body, state, (xs, labels, avail))
 
     return jax.jit(run_chunk, donate_argnums=(0,) if donate else ())
+
+
+def runner_cache_info() -> dict:
+    """Hit/miss/size counters of the compiled-runner cache, for serving
+    stats (``engine.stream.cache_stats`` merges these with its own)."""
+    info = _chunk_runner.cache_info()
+    return {
+        "chunk_runner": {
+            "hits": info.hits,
+            "misses": info.misses,
+            "size": info.currsize,
+            "maxsize": info.maxsize,
+        }
+    }
 
 
 def run_fleet(
@@ -228,8 +361,12 @@ def gate(
     """Predict + decide which streams must consult the teacher.
 
     Runs the drift detector (a drifting stream is forced to query — the
-    paper's pruning condition 2) and charges the comm meter for issued
-    queries.  Labels arrive later via ``apply_labels``.
+    paper's pruning condition 2), charges the comm meter for issued
+    queries, and accounts the ladder's skip events for the non-querying
+    streams (same split as ``plan``/``learn``: skip transitions belong to
+    decision time, query transitions to answer time — so applying several
+    deferred replies in one tick cannot multiply skip counts).  Labels
+    arrive later via ``apply_labels``.
     """
     h, c, o = _predict(state, x, cfg)
     del h
@@ -240,8 +377,14 @@ def gate(
         state.prune, o, state.elm.count, new_drift.active, cfg.prune
     )
     meter = state.meter.charge_query(x.shape[-1], query_mask)
+    off = jnp.zeros_like(query_mask)
+    new_prune = _tree_where(
+        jnp.logical_not(query_mask),
+        pruning.update(state.prune, off, off, conf, cfg.prune),
+        state.prune,
+    )
     new_state = sharding.constrain_fleet(
-        state._replace(drift=new_drift, meter=meter)
+        state._replace(drift=new_drift, meter=meter, prune=new_prune)
     )
     out = {
         "pred": c,
@@ -261,7 +404,13 @@ def apply_labels(
     mask: jnp.ndarray,  # (S,) bool — streams whose teacher answered
     cfg: EngineConfig,
 ) -> EngineState:
-    """Asynchronous label application: masked rank-1 RLS + auto-theta step."""
+    """Asynchronous label application: masked rank-1 RLS + auto-theta step.
+
+    Only the answered streams (``mask``) transition the ladder — the
+    skip accounting for everyone else already happened in ``gate`` — so
+    calling this once per arrived reply (zero, one, or many per tick,
+    depending on teacher latency) keeps per-tick controller semantics.
+    """
     h, c, o = _predict(state, x, cfg)
     conf = pruning.confidence(o)
     agree = c == labels
@@ -269,7 +418,11 @@ def apply_labels(
     new_elm = oselm.fleet_rank1_update_h(
         state.elm, h, y, cfg.elm, mask=mask.astype(jnp.float32)
     )
-    new_prune = pruning.update(state.prune, mask, agree, conf, cfg.prune)
+    new_prune = _tree_where(
+        mask,
+        pruning.update(state.prune, mask, agree, conf, cfg.prune),
+        state.prune,
+    )
     return sharding.constrain_fleet(
         state._replace(elm=new_elm, prune=new_prune)
     )

@@ -1,0 +1,164 @@
+"""The paper's single-stream ODL API (Algorithm 1) — scalar S=1 view.
+
+This is the engine-resident home of the API that used to live in
+``core/odl_head.py`` (now a documented alias of this module).  The actual
+state machine is the batched fleet engine (``engine/fleet.py``); the scalar
+view adds a leading stream axis of 1, delegates to ``fleet_step`` /
+``run_fleet``, and strips the axis again.  Semantics are bit-identical per
+stream; code that handles more than one stream should use ``repro.engine``
+directly (``init_fleet`` / ``run_fleet`` / ``stream.run``).
+
+``ODLCoreConfig`` / ``ODLCoreState`` / ``StepOutput`` are the engine's
+``EngineConfig`` / ``EngineState`` / ``FleetStepOutput`` (one set of pytree
+classes for both views — see ``engine/types.py``), so existing checkpoints
+and configs keep working.  The fleet import is deferred to call time so the
+``repro.core`` -> alias -> engine import cycle resolves in both orders.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import oselm, pruning
+from repro.engine.types import (
+    ODLCoreConfig,
+    ODLCoreState,
+    StepOutput,
+    init_state,
+)
+
+__all__ = [
+    "ODLCoreConfig",
+    "ODLCoreState",
+    "StepOutput",
+    "accuracy",
+    "init_state",
+    "run_stream",
+    "run_training_phase",
+    "step",
+    "train_phase_step",
+]
+
+
+def _fleet():
+    from repro.engine import fleet  # deferred: breaks the import cycle
+
+    return fleet
+
+
+def _expand(tree):
+    """Scalar state/arrays -> fleet of one stream (leading axis 1)."""
+    return jax.tree.map(lambda a: jnp.asarray(a)[None], tree)
+
+
+def _squeeze(tree):
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+def _scalar_step(
+    state: ODLCoreState,
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    teacher: Callable,
+    cfg: ODLCoreConfig,
+    mode: str,
+    teacher_available: Optional[jnp.ndarray],
+    drift_active: Optional[jnp.ndarray],
+) -> tuple[ODLCoreState, StepOutput]:
+    t = teacher(idx, x)  # always traced (static shapes), used only if queried
+    fstate, fout = _fleet().fleet_step(
+        _expand(state),
+        x[None],
+        jnp.asarray(t, jnp.int32)[None],
+        cfg,
+        mode=mode,
+        teacher_available=None if teacher_available is None else _expand(teacher_available),
+        drift_active=None if drift_active is None else _expand(drift_active),
+    )
+    return _squeeze(fstate), _squeeze(fout)
+
+
+def train_phase_step(
+    state: ODLCoreState,
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    teacher: Callable,
+    cfg: ODLCoreConfig,
+    drift_active: Optional[jnp.ndarray] = None,
+    teacher_available: Optional[jnp.ndarray] = None,
+) -> tuple[ODLCoreState, StepOutput]:
+    """One sample of the paper's retraining phase (pruning always armed).
+
+    ``drift_active`` models pruning condition 2 (default: not detected).
+    ``teacher_available`` models the paper's retry-or-skip fault policy: when
+    False the query is suppressed *and* no training happens this step.
+    """
+    return _scalar_step(
+        state, x, idx, teacher, cfg, "train_phase", teacher_available, drift_active
+    )
+
+
+def step(
+    state: ODLCoreState,
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    teacher: Callable,
+    cfg: ODLCoreConfig,
+) -> tuple[ODLCoreState, StepOutput]:
+    """Full Algorithm 1: drift detector switches predicting <-> training."""
+    return _scalar_step(state, x, idx, teacher, cfg, "algo1", None, None)
+
+
+def run_training_phase(
+    state: ODLCoreState,
+    xs: jnp.ndarray,  # (T, n_in)
+    teacher_labels: jnp.ndarray,  # (T,) int32
+    cfg: ODLCoreConfig,
+    teacher_available: Optional[jnp.ndarray] = None,  # (T,) bool
+) -> tuple[ODLCoreState, StepOutput]:
+    """Scan the retraining phase over a stream (paper §3 step 3) — a one-
+    stream ``engine.run_fleet``.
+
+    Condition 1 is lifetime trained count — initial training (step 1) already
+    satisfies max(N, 288), so pruning is armed from the first stream sample,
+    exactly as required to reproduce Fig. 3/4 (see should_query docstring).
+    """
+    state = state._replace(prune=pruning.reset_phase(state.prune))
+    avail = None if teacher_available is None else teacher_available[:, None]
+    fstate, fouts = _fleet().run_fleet(
+        _expand(state),
+        xs[:, None],
+        jnp.asarray(teacher_labels, jnp.int32)[:, None],
+        cfg,
+        mode="train_phase",
+        teacher_available=avail,
+    )
+    return _squeeze(fstate), jax.tree.map(lambda a: a[:, 0], fouts)
+
+
+def run_stream(
+    state: ODLCoreState,
+    xs: jnp.ndarray,
+    teacher_labels: jnp.ndarray,
+    cfg: ODLCoreConfig,
+) -> tuple[ODLCoreState, StepOutput]:
+    """Scan the full Algorithm-1 ``step`` over a stream (one-stream fleet)."""
+    fstate, fouts = _fleet().run_fleet(
+        _expand(state),
+        xs[:, None],
+        jnp.asarray(teacher_labels, jnp.int32)[:, None],
+        cfg,
+        mode="algo1",
+    )
+    return _squeeze(fstate), jax.tree.map(lambda a: a[:, 0], fouts)
+
+
+def accuracy(
+    state: ODLCoreState, xs: jnp.ndarray, ys: jnp.ndarray, cfg: ODLCoreConfig
+) -> jnp.ndarray:
+    """Batch test accuracy of the current head."""
+    preds, _ = oselm.predict(state.elm, xs, cfg.elm)
+    return jnp.mean((preds == ys).astype(jnp.float32))

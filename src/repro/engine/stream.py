@@ -1,0 +1,523 @@
+"""Streaming async-teacher runtime: Algorithm 1 from a tick iterator.
+
+``run_fleet`` needs the whole stream materialized as one ``(T, S, n_in)``
+array with same-tick labels — fine for offline repro, wrong for the paper's
+actual deployment story, where each tick arrives once and teacher answers
+come back with real latency.  This module is the runtime for that case::
+
+    ticks ──▶ plan (device) ──▶ queried feats ──▶ Teacher.ask ──╮
+      ▲                                                         │ latency,
+      │  host ingests tick t+1 while the device runs tick t     │ jitter,
+      ╰─ learn (device) ◀── PendingRing ◀──── Teacher.poll ◀────╯ loss
+
+Pieces:
+
+* ``Teacher`` protocol — ``ask(feats, mask, tick) -> ticket`` and
+  ``poll(tick) -> [TeacherReply]`` (plus ``in_flight()`` so the runtime
+  knows when draining is pointless).  ``LatencyTeacher`` implements it with
+  a tick-granular latency / jitter / loss / permanent-outage model;
+  ``array_labels`` adapts a materialized label array (the paper's protocol,
+  where ground truth plays the teacher).
+* ``PendingRing`` — fixed-capacity buffer of in-flight tickets holding the
+  plan-time features (``h``), prediction, and confidence until the answer
+  arrives.  Overflow evicts the oldest ticket (metered), so memory stays
+  bounded no matter how laggy the teacher; answers for evicted tickets are
+  counted as orphaned and dropped.
+* ``run`` — the double-buffered tick loop: the next tick is pulled from the
+  iterator and shipped to the device while the current tick's ``plan``
+  computes; answered labels apply out of order through the engine's masked
+  ``learn``.  Per-tick wall latency and ask→answer label latency are
+  recorded in ``StreamStats`` (p50/p95).
+
+With a zero-latency teacher the runtime reproduces ``run_fleet`` outputs
+and final state bit-for-bit (locked by ``tests/test_stream.py``): ``plan``
+and ``learn`` are the exact two halves of ``fleet_step``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Callable, Iterable, NamedTuple, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import fleet
+from repro.engine.types import EngineConfig, EngineState, FleetStepOutput
+
+# Safety bound on drain polling — a broken Teacher that reports in-flight
+# tickets forever must not hang the runtime (serve.py uses it too).
+MAX_DRAIN_TICKS = 1_000_000
+
+# Latency distributions keep a sliding window: long-running servers must
+# not grow per-tick history without bound (same class of fix as the
+# bounded PendingRing and runner LRUs).  p50/p95 reflect recent ticks.
+STATS_WINDOW = 4096
+
+
+class TeacherReply(NamedTuple):
+    """One answered ticket.  ``answered`` may be a subset of the asked mask
+    (a teacher can answer some streams of a ticket and lose others)."""
+
+    ticket: int
+    labels: np.ndarray  # (S,) int32 — valid where ``answered``
+    answered: np.ndarray  # (S,) bool
+
+
+class Teacher(Protocol):
+    """Asynchronous label oracle with tick-granular time."""
+
+    def ask(self, feats, mask: np.ndarray, tick: int) -> int:
+        """Submit one query batch (feats (S, n_in), mask (S,) bool marks the
+        streams actually querying).  Returns a ticket id."""
+        ...
+
+    def poll(self, tick: int) -> list[TeacherReply]:
+        """Labels that have arrived by ``tick`` (possibly out of order)."""
+        ...
+
+    def in_flight(self) -> int:
+        """Tickets asked but not yet answered nor lost."""
+        ...
+
+
+# (tick, feats) -> (S,) int32 labels.  ``feats`` may be a device array; only
+# pull it to host if the labels actually depend on it.
+LabelFn = Callable[[int, object], np.ndarray]
+
+
+def array_labels(labels) -> LabelFn:
+    """Adapt a materialized (T, S) label array to a ``LabelFn`` — the
+    paper's evaluation protocol, where ground truth plays the teacher."""
+    arr = np.asarray(labels)
+
+    def fn(tick, feats):
+        del feats
+        return np.asarray(arr[tick], np.int32)
+
+    return fn
+
+
+@dataclasses.dataclass
+class LatencyTeacher:
+    """Teacher with a configurable latency / jitter / loss / outage model.
+
+    Each ``ask`` becomes one in-flight ticket answered ``latency`` ticks
+    later, plus a uniform per-ticket jitter in [0, jitter] — so with jitter
+    > 0 answers arrive out of order.  A ``loss_prob`` fraction of tickets
+    is silently lost (never answered), and ``outage_after >= t`` kills
+    every ticket asked at or after tick t — the paper's permanent-outage
+    fault case ("queries will be retried later or skipped").
+    """
+
+    label_fn: LabelFn
+    latency: int = 0
+    jitter: int = 0
+    loss_prob: float = 0.0
+    outage_after: Optional[int] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._next_ticket = 0
+        # (due_tick, ticket, mask, labels) — labels are computed at ask time
+        # so they reflect the tick the query was about.
+        self._inbox: list[tuple[int, int, np.ndarray, np.ndarray]] = []
+
+    def ask(self, feats, mask, tick):
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        lost = (
+            self.outage_after is not None and tick >= self.outage_after
+        ) or (self.loss_prob > 0.0 and self._rng.uniform() < self.loss_prob)
+        if not lost:
+            due = tick + self.latency
+            if self.jitter:
+                due += int(self._rng.integers(0, self.jitter + 1))
+            labels = np.asarray(self.label_fn(tick, feats), np.int32)
+            self._inbox.append((due, ticket, np.asarray(mask, bool), labels))
+        return ticket
+
+    def poll(self, tick):
+        ready = [e for e in self._inbox if e[0] <= tick]
+        if not ready:
+            return []
+        self._inbox = [e for e in self._inbox if e[0] > tick]
+        ready.sort(key=lambda e: (e[0], e[1]))
+        return [TeacherReply(ticket=t, labels=lab, answered=m) for _, t, m, lab in ready]
+
+    def in_flight(self):
+        return len(self._inbox)
+
+
+class PendingTicket(NamedTuple):
+    """What must survive the teacher round-trip: the plan-time features and
+    controller context of one asked tick."""
+
+    tick: int
+    queried: np.ndarray  # (S,) bool host copy of the asked mask
+    plan: fleet.PlanOutput  # device arrays captured at query time
+
+
+class PendingRing:
+    """Fixed-capacity ordered map ticket -> entry.
+
+    ``push`` evicts and returns the oldest entry when full (the runtime
+    meters the drop); ``pop`` of an unknown/evicted ticket returns None.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"ring capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._slots: "collections.OrderedDict[int, object]" = collections.OrderedDict()
+
+    def __len__(self):
+        return len(self._slots)
+
+    def push(self, ticket: int, entry):
+        dropped = None
+        if len(self._slots) >= self.capacity:
+            dropped = self._slots.popitem(last=False)[1]
+        self._slots[ticket] = entry
+        return dropped
+
+    def pop(self, ticket: int):
+        return self._slots.pop(ticket, None)
+
+    def drain(self):
+        """Remove and return all entries (oldest first)."""
+        out = list(self._slots.values())
+        self._slots.clear()
+        return out
+
+
+def _percentile(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Counters + latency distributions of one ``run`` (or serving loop)."""
+
+    ticks: int = 0
+    stream_steps: int = 0
+    tickets_issued: int = 0
+    queries_issued: int = 0  # stream-queries (mask sum over all asks)
+    labels_applied: int = 0  # stream-labels applied through ``learn``
+    tickets_dropped: int = 0  # evicted by ring overflow
+    queries_dropped: int = 0
+    replies_orphaned: int = 0  # answered after their ticket was evicted
+    tickets_lost: int = 0  # never answered (teacher loss / outage)
+    wall_s: float = 0.0
+    tick_ms: "collections.deque" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=STATS_WINDOW)
+    )
+    label_latency_ticks: "collections.deque" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=STATS_WINDOW)
+    )
+
+    @property
+    def tick_p50_ms(self) -> float:
+        return _percentile(self.tick_ms, 50)
+
+    @property
+    def tick_p95_ms(self) -> float:
+        return _percentile(self.tick_ms, 95)
+
+    @property
+    def label_latency_p50(self) -> float:
+        return _percentile(self.label_latency_ticks, 50)
+
+    @property
+    def label_latency_p95(self) -> float:
+        return _percentile(self.label_latency_ticks, 95)
+
+    @property
+    def steps_per_s(self) -> float:
+        return self.stream_steps / self.wall_s if self.wall_s > 0 else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "ticks": self.ticks,
+            "stream_steps": self.stream_steps,
+            "steps_per_s": self.steps_per_s,
+            "tickets_issued": self.tickets_issued,
+            "queries_issued": self.queries_issued,
+            "labels_applied": self.labels_applied,
+            "tickets_dropped": self.tickets_dropped,
+            "queries_dropped": self.queries_dropped,
+            "replies_orphaned": self.replies_orphaned,
+            "tickets_lost": self.tickets_lost,
+            "tick_p50_ms": self.tick_p50_ms,
+            "tick_p95_ms": self.tick_p95_ms,
+            "label_latency_p50": self.label_latency_p50,
+            "label_latency_p95": self.label_latency_p95,
+            "caches": cache_stats(),
+        }
+
+
+# The per-tick runners take state leaves positionally and return only the
+# leaves their half actually writes; the host reassembles the pytree with
+# ``_replace`` (zero-copy).  Returning the full EngineState would make XLA
+# materialize a fresh copy of every pass-through leaf each tick — P alone
+# is S·N²·4 bytes, which at S=1024 dwarfs the tick's real compute.
+
+@functools.lru_cache(maxsize=fleet.RUNNER_CACHE_SIZE)
+def _plan_runner(cfg: EngineConfig, mode: str, donate: bool):
+    def run_plan(elm, prune, drift, meter, x):
+        state = EngineState(elm=elm, prune=prune, drift=drift, meter=meter)
+        new_state, p = fleet.plan(state, x, cfg, mode=mode)
+        return (new_state.prune, new_state.drift, new_state.meter), p
+
+    # elm passes through plan untouched (and stays live on the host side),
+    # so only the replaced controller leaves are donation candidates.
+    return jax.jit(run_plan, donate_argnums=(1, 2, 3) if donate else ())
+
+
+@functools.lru_cache(maxsize=fleet.RUNNER_CACHE_SIZE)
+def _learn_runner(cfg: EngineConfig, donate: bool):
+    def run_learn(elm, prune, drift, meter, h, labels, pred, conf, mask, controller_on,
+                  theta):
+        state = EngineState(elm=elm, prune=prune, drift=drift, meter=meter)
+        new_state = fleet.learn(
+            state, h, labels, pred, conf, mask, controller_on, cfg, theta=theta
+        )
+        return new_state.elm, new_state.prune
+
+    return jax.jit(run_learn, donate_argnums=(0, 1) if donate else ())
+
+
+@functools.lru_cache(maxsize=fleet.RUNNER_CACHE_SIZE)
+def _learn_plan_runner(cfg: EngineConfig, mode: str, donate: bool):
+    """Steady-state fused tick: apply one reply's labels, then plan the next
+    tick, in a single dispatch.  Halves per-tick dispatch overhead and lets
+    XLA fuse across the learn→plan boundary — the same fusion ``run_fleet``
+    gets inside its scan — so the zero-latency stream keeps pace with it.
+    """
+
+    def run_learn_plan(
+        elm, prune, drift, meter, h, labels, pred, conf, mask, controller_on, theta,
+        x_next
+    ):
+        state = EngineState(elm=elm, prune=prune, drift=drift, meter=meter)
+        state = fleet.learn(
+            state, h, labels, pred, conf, mask, controller_on, cfg, theta=theta
+        )
+        new_state, p = fleet.plan(state, x_next, cfg, mode=mode)
+        return (new_state.elm, new_state.prune, new_state.drift, new_state.meter), p
+
+    return jax.jit(run_learn_plan, donate_argnums=(0, 1, 2, 3) if donate else ())
+
+
+def cache_stats() -> dict:
+    """Hit/miss counters for every compiled-runner cache in the engine."""
+    out = dict(fleet.runner_cache_info())
+    for name, fn in (
+        ("plan_runner", _plan_runner),
+        ("learn_runner", _learn_runner),
+        ("learn_plan_runner", _learn_plan_runner),
+    ):
+        info = fn.cache_info()
+        out[name] = {
+            "hits": info.hits,
+            "misses": info.misses,
+            "size": info.currsize,
+            "maxsize": info.maxsize,
+        }
+    return out
+
+
+def run(
+    state: EngineState,
+    ticks: Iterable,  # yields (S, n_in) feature arrays, one per tick
+    cfg: EngineConfig,
+    teacher: Teacher,
+    mode: str = "algo1",
+    capacity: int = 64,
+    collect: bool = True,
+    drain: bool = True,
+    donate: Optional[bool] = None,
+    stats: Optional[StreamStats] = None,
+) -> tuple[EngineState, Optional[FleetStepOutput], StreamStats]:
+    """Drive the engine from a tick iterator with an asynchronous teacher.
+
+    Per tick: dispatch ``plan`` (device), ingest + ship the *next* tick
+    while it runs (double buffering), then submit the queried features to
+    ``teacher.ask`` and apply any answers ``teacher.poll`` returns through
+    ``learn`` — out of order, against the features captured at query time.
+    Pending tickets live in a ``capacity``-slot ring; overflow drops the
+    oldest.  After the iterator is exhausted, answers still in flight are
+    drained (``drain=True``) so no late label is silently discarded.
+
+    Returns ``(final state, outputs, stats)``.  ``outputs`` mirrors
+    ``run_fleet``'s stacked (T, S) ``FleetStepOutput`` (host arrays;
+    ``trained`` marks label-application ticks) — or None when
+    ``collect=False`` (long-running servers should not accumulate history)
+    or the iterator was empty.
+
+    ``donate`` (default True) lets every per-tick dispatch update P/beta
+    and the controller leaves in place instead of allocating fresh buffers
+    (P is the dominant one at S·N²·4 bytes/tick).  The runtime first takes
+    ownership of ``state`` with a one-time copy, so the caller's pytree
+    stays valid either way.
+    """
+    if donate is None:
+        donate = True
+    # Off-CPU, ship the next tick to the device eagerly so the transfer
+    # overlaps the in-flight dispatch; on CPU the eager path is pure Python
+    # overhead (~0.5 ms/call) and pjit's native conversion is far cheaper.
+    ship = (lambda a: a) if jax.default_backend() == "cpu" else jax.device_put
+    if donate:
+        # Own the buffers we are about to donate tick after tick; the
+        # caller's state must survive the run.
+        state = jax.tree.map(jnp.copy, state)
+    plan_fn = _plan_runner(cfg, mode, donate)
+    learn_fn = _learn_runner(cfg, donate)
+    fused_fn = _learn_plan_runner(cfg, mode, donate)
+    ring = PendingRing(capacity)
+    if stats is None:
+        stats = StreamStats()
+    cols: dict[str, list] = {
+        k: [] for k in ("pred", "outputs", "queried", "theta", "confidence", "mode_training")
+    }
+    trained_rows: list[np.ndarray] = []
+
+    full_mask_dev: list = [None]  # cached device-side all-True apply mask
+
+    def _claim(reply: TeacherReply, now: int):
+        """Resolve a reply against the ring; returns (plan, learn args) or
+        None, with all drop/orphan accounting applied."""
+        ent = ring.pop(reply.ticket)
+        if ent is None:
+            stats.replies_orphaned += 1
+            return None
+        mask = ent.queried & np.asarray(reply.answered, bool)
+        n = int(mask.sum())
+        if n == 0:
+            # The teacher answered the ticket but covered none of its asked
+            # streams — those queries are gone for good; meter the ticket as
+            # lost so queries_issued stays reconcilable against
+            # applied + dropped + lost.
+            stats.tickets_lost += 1
+            return None
+        stats.labels_applied += n
+        stats.label_latency_ticks.append(now - ent.tick)
+        if collect and ent.tick < len(trained_rows):
+            trained_rows[ent.tick] |= mask
+        if n == mask.shape[0]:
+            # Steady state (everyone queried, everyone answered): reuse one
+            # device-resident mask instead of a fresh upload per tick.
+            if full_mask_dev[0] is None or full_mask_dev[0].shape != mask.shape:
+                full_mask_dev[0] = jnp.ones(mask.shape, jnp.bool_)
+            mask_dev = full_mask_dev[0]
+        else:
+            mask_dev = jnp.asarray(mask)
+        p = ent.plan
+        return (
+            p.h,
+            ship(np.asarray(reply.labels, np.int32)),
+            p.pred,
+            p.confidence,
+            mask_dev,
+            p.controller_on,
+            p.theta,
+        )
+
+    def _learn(state, args):
+        new_elm, new_prune = learn_fn(
+            state.elm, state.prune, state.drift, state.meter, *args
+        )
+        return state._replace(elm=new_elm, prune=new_prune)
+
+    it = iter(ticks)
+    nxt = next(it, None)
+    t = 0
+    t_start = time.perf_counter()
+    p = None
+    if nxt is not None:
+        # First tick: nothing pending yet, plain plan dispatch.
+        nxt = ship(nxt)
+        (new_prune, new_drift, new_meter), p = plan_fn(
+            state.elm, state.prune, state.drift, state.meter, nxt
+        )
+        state = state._replace(prune=new_prune, drift=new_drift, meter=new_meter)
+    while nxt is not None:
+        x = nxt
+        t0 = time.perf_counter()
+        # Double buffering: pull tick t+1 from the iterator and ship it to
+        # the device while the device is busy with tick t's plan.
+        nxt = next(it, None)
+        if nxt is not None:
+            nxt = ship(nxt)
+        queried_host = np.asarray(p.queried)  # host syncs on tick t here
+        if collect:
+            for k in cols:
+                cols[k].append(np.asarray(getattr(p, k)))
+            trained_rows.append(np.zeros(queried_host.shape, bool))
+        n_q = int(queried_host.sum())
+        if n_q:
+            ticket = teacher.ask(x, queried_host, t)
+            stats.tickets_issued += 1
+            stats.queries_issued += n_q
+            dropped = ring.push(ticket, PendingTicket(t, queried_host, p))
+            if dropped is not None:
+                stats.tickets_dropped += 1
+                stats.queries_dropped += int(dropped.queried.sum())
+        applies = [a for a in (_claim(r, t) for r in teacher.poll(t)) if a is not None]
+        if nxt is not None:
+            # Steady state: fuse the last reply's learn with the next tick's
+            # plan into one dispatch (earlier replies, if any, apply first,
+            # so all of tick t's answers land before tick t+1 is planned).
+            if applies:
+                for args in applies[:-1]:
+                    state = _learn(state, args)
+                (elm2, prune2, drift2, meter2), p = fused_fn(
+                    state.elm, state.prune, state.drift, state.meter,
+                    *applies[-1], nxt,
+                )
+                state = EngineState(elm=elm2, prune=prune2, drift=drift2, meter=meter2)
+            else:
+                (new_prune, new_drift, new_meter), p = plan_fn(
+                    state.elm, state.prune, state.drift, state.meter, nxt
+                )
+                state = state._replace(
+                    prune=new_prune, drift=new_drift, meter=new_meter
+                )
+        else:
+            for args in applies:
+                state = _learn(state, args)
+        stats.ticks += 1
+        stats.stream_steps += int(x.shape[0])
+        stats.tick_ms.append((time.perf_counter() - t0) * 1e3)
+        t += 1
+
+    if drain:
+        drained = 0
+        while len(ring) and teacher.in_flight() > 0 and drained < MAX_DRAIN_TICKS:
+            for reply in teacher.poll(t):
+                args = _claim(reply, t)
+                if args is not None:
+                    state = _learn(state, args)
+            t += 1
+            drained += 1
+    lost = ring.drain()
+    stats.tickets_lost += len(lost)
+    stats.wall_s += time.perf_counter() - t_start
+
+    outs = None
+    if collect and cols["pred"]:
+        outs = FleetStepOutput(
+            pred=np.stack(cols["pred"]),
+            outputs=np.stack(cols["outputs"]),
+            queried=np.stack(cols["queried"]),
+            trained=np.stack(trained_rows),
+            theta=np.stack(cols["theta"]),
+            confidence=np.stack(cols["confidence"]),
+            mode_training=np.stack(cols["mode_training"]),
+        )
+    return state, outs, stats

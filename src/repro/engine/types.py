@@ -1,0 +1,77 @@
+"""Shared pytree/config types for the ODL engine (single source of truth).
+
+``EngineConfig`` / ``EngineState`` / ``FleetStepOutput`` describe one ODL
+head when their leaves are axis-free, and a whole fleet when every leaf
+carries a leading stream axis S.  The scalar-era names (``ODLCoreConfig`` /
+``ODLCoreState`` / ``StepOutput``) from the deprecated ``core/odl_head.py``
+API are aliases of the *same* classes, so existing checkpoints, configs,
+and the paper-repro tests keep working unchanged.
+
+This module is a leaf of the engine package: it imports only ``repro.core``
+submodules (never ``core/__init__`` attributes), which keeps the
+``repro.core`` -> ``odl_head`` (alias) -> ``repro.engine`` -> ``repro.core``
+import cycle resolvable from either entry point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import drift as drift_mod
+from repro.core import labels as labels_mod
+from repro.core import oselm, pruning
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """ODL configuration (identical semantics for S = 1 and a fleet)."""
+
+    elm: oselm.OSELMConfig = oselm.OSELMConfig()
+    prune: pruning.PruneConfig = None  # type: ignore[assignment]
+    drift: drift_mod.DriftConfig = drift_mod.DriftConfig()
+
+    def __post_init__(self):
+        if self.prune is None:
+            object.__setattr__(
+                self, "prune", pruning.PruneConfig.for_hidden(self.elm.n_hidden)
+            )
+
+
+class EngineState(NamedTuple):
+    """elm/prune/drift/meter; axis-free leaves for one head, leading-S
+    leaves for a fleet."""
+
+    elm: oselm.OSELMState
+    prune: pruning.PruneState
+    drift: drift_mod.DriftState
+    meter: labels_mod.CommMeter
+
+
+class FleetStepOutput(NamedTuple):
+    pred: jnp.ndarray  # int32 local predicted class c
+    outputs: jnp.ndarray  # (.., m) raw outputs O
+    queried: jnp.ndarray  # bool
+    trained: jnp.ndarray  # bool
+    theta: jnp.ndarray  # f32 current threshold
+    confidence: jnp.ndarray  # f32 p1 - p2
+    mode_training: jnp.ndarray  # bool
+
+
+def init_state(cfg: EngineConfig) -> EngineState:
+    """Fresh axis-free (single-head) state; broadcast for a fleet via
+    ``engine.broadcast_streams`` / ``engine.init_fleet``."""
+    return EngineState(
+        elm=oselm.init_state(cfg.elm),
+        prune=pruning.init_state(),
+        drift=drift_mod.init_state(),
+        meter=labels_mod.CommMeter.zero(),
+    )
+
+
+# Scalar-era names (see core/odl_head.py, the documented alias module).
+ODLCoreConfig = EngineConfig
+ODLCoreState = EngineState
+StepOutput = FleetStepOutput

@@ -3,27 +3,34 @@
 Each decode step emits (next-token logits, per-stream ODL prediction,
 query_mask).  Streams whose P1P2 confidence clears auto-theta SKIP the
 teacher — the paper's data pruning as a serving-compute/communication saver.
-Teacher answers arrive asynchronously (here: next loop tick) and are applied
-with ``serve_apply_labels`` (rank-1 RLS per stream).
+Teacher answers arrive asynchronously through the engine's Teacher protocol
+(``repro.engine.stream``) with injectable latency/jitter; in-flight queries
+wait in a fixed-capacity ``PendingRing`` and are applied out of order with
+``serve_apply_labels`` (masked rank-1 RLS per stream).
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tokens 32
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tokens 32 \
+      --teacher-latency 2 --teacher-jitter 1
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.engine import stream
 from repro.models import model as model_lib
 
 
 def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 16,
-          gen_tokens: int = 32, max_len: int = 128, seed: int = 0):
+          gen_tokens: int = 32, max_len: int = 128, seed: int = 0,
+          teacher_latency: int = 1, teacher_jitter: int = 0,
+          pending_capacity: int = 8):
     cfg = configs.get_config(arch, variant)
     key = jax.random.PRNGKey(seed)
     params = model_lib.layers.init_params(model_lib.build_schema(cfg), key)
@@ -38,37 +45,81 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
         lambda st, f, l, m: model_lib.serve_apply_labels(st, f, l, m, cfg)
     )
 
-    tok = prompts[:, -1:]
-    queries = skips = applied = 0
-    pending = None  # (feats, mask) awaiting teacher labels
+    # The smoke teacher predicts random classes (a real deployment points
+    # label_fn at the pod-side backbone ensemble); latency/jitter model the
+    # BLE/network round-trip in decode ticks.
     rng = np.random.default_rng(seed)
+    teacher = stream.LatencyTeacher(
+        label_fn=lambda tick, feats: rng.integers(0, cfg.odl.n_out, size=batch),
+        latency=teacher_latency, jitter=teacher_jitter, seed=seed,
+    )
+    ring = stream.PendingRing(pending_capacity)
+    stats = stream.StreamStats()
 
-    def answer(st, pend):
-        feats, mask = pend
-        labels = jnp.asarray(rng.integers(0, cfg.odl.n_out, size=batch), jnp.int32)
-        return apply_labels(st, feats, labels, mask), int(np.asarray(mask).sum())
+    def drain_replies(state, now):
+        for reply in teacher.poll(now):
+            ent = ring.pop(reply.ticket)
+            if ent is None:
+                stats.replies_orphaned += 1
+                continue
+            asked_tick, feats, qmask = ent
+            mask = qmask & np.asarray(reply.answered, bool)
+            n = int(mask.sum())
+            if n == 0:
+                # Reply covered none of the asked streams: those queries
+                # are gone for good — meter the ticket as lost.
+                stats.tickets_lost += 1
+                continue
+            state = apply_labels(
+                state, feats, jnp.asarray(reply.labels, jnp.int32), jnp.asarray(mask)
+            )
+            stats.labels_applied += n
+            stats.label_latency_ticks.append(now - asked_tick)
+        return state
 
+    tok = prompts[:, -1:]
+    skips = 0
     for i in range(gen_tokens):
+        t0 = time.perf_counter()
         logits, state, odl = step(params, state, tok)
         tok = jnp.argmax(logits, -1)[:, None]
         q = np.asarray(odl["query_mask"])
-        queries += int(q.sum())
+        n_q = int(q.sum())
         skips += int((~q).sum())
-        # Async label acquisition: teacher answers last tick's queries.
-        if pending is not None:
-            state, n = answer(state, pending)
-            applied += n
-        pending = (odl["feats"], odl["query_mask"])
-    # The decode loop exits with the final tick's queries still in flight;
-    # apply those teacher answers too so no labels are silently dropped.
-    if pending is not None:
-        state, n = answer(state, pending)
-        applied += n
+        if n_q:
+            ticket = teacher.ask(odl["feats"], q, i)
+            stats.tickets_issued += 1
+            stats.queries_issued += n_q
+            dropped = ring.push(ticket, (i, odl["feats"], q))
+            if dropped is not None:
+                stats.tickets_dropped += 1
+                stats.queries_dropped += int(dropped[2].sum())
+        state = drain_replies(state, i)
+        jax.block_until_ready(tok)
+        stats.ticks += 1
+        stats.stream_steps += batch
+        stats.tick_ms.append((time.perf_counter() - t0) * 1e3)
+    # The decode loop exits with the final ticks' queries still in flight;
+    # wait out the teacher so no answered labels are silently dropped.
+    t = gen_tokens
+    drained = 0
+    while len(ring) and teacher.in_flight() > 0 and drained < stream.MAX_DRAIN_TICKS:
+        state = drain_replies(state, t)
+        t += 1
+        drained += 1
+    stats.tickets_lost += len(ring.drain())
+
+    queries = stats.queries_issued
     total = queries + skips
     meter_bytes = float(np.asarray(state.odl.meter.total).sum())
     print(f"decoded {gen_tokens} tokens x {batch} streams; "
           f"teacher queries {queries}/{total} ({100*queries/max(total, 1):.1f}% comm volume), "
-          f"labels applied {applied}/{queries}, {meter_bytes/1e3:.1f} kB metered")
+          f"labels applied {stats.labels_applied}/{queries}, "
+          f"{stats.tickets_dropped} tickets dropped, {meter_bytes/1e3:.1f} kB metered")
+    print(f"tick latency p50/p95: {stats.tick_p50_ms:.2f}/{stats.tick_p95_ms:.2f} ms; "
+          f"label latency p50/p95: {stats.label_latency_p50:.0f}/"
+          f"{stats.label_latency_p95:.0f} ticks "
+          f"(teacher latency {teacher_latency}+U[0,{teacher_jitter}])")
     return queries, skips
 
 
@@ -78,8 +129,16 @@ def main(argv=None):
     ap.add_argument("--variant", default="smoke")
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--teacher-latency", type=int, default=1,
+                    help="teacher answer latency in decode ticks")
+    ap.add_argument("--teacher-jitter", type=int, default=0,
+                    help="extra uniform per-ticket latency in [0, J] ticks")
+    ap.add_argument("--pending-capacity", type=int, default=8,
+                    help="in-flight query ring capacity (oldest dropped)")
     args = ap.parse_args(argv)
-    serve(args.arch, args.variant, batch=args.batch, gen_tokens=args.tokens)
+    serve(args.arch, args.variant, batch=args.batch, gen_tokens=args.tokens,
+          teacher_latency=args.teacher_latency, teacher_jitter=args.teacher_jitter,
+          pending_capacity=args.pending_capacity)
 
 
 if __name__ == "__main__":
