@@ -1,0 +1,198 @@
+"""Multi-tenant multiplexer vs N sequential stream.run calls.
+
+Measures aggregate stream-steps/second and per-tenant tick p50/p95 for N
+independent fleets (tenants) of S streams over T ticks each:
+
+  * ``sequential`` — N back-to-back ``stream.run`` calls, one per tenant
+    (the no-multiplexer baseline: each fleet waits for the previous one).
+  * ``multiplex``  — ``engine.multiplex.run`` interleaving the same N
+    tenants round-robin in one process, sharing compiled runners.
+
+With identical tenant configs the multiplexer pays only scheduler overhead
+(the executables are shared either way through the runner LRUs), so
+aggregate throughput should stay >= ~90% of sequential — that, plus the
+bit-for-bit parity locked by tests/test_multiplex.py, is the acceptance
+bar for serving many fleets from one process.  Both sides report best-of-N
+interleaved wall time (same protocol as stream_bench).
+
+Writes BENCH_multiplex.json next to the repo root (same schema family as
+BENCH_stream.json).
+
+Run:  PYTHONPATH=src python benchmarks/multiplex_bench.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro import engine
+from repro.core import drift as drift_mod
+from repro.core import oselm, pruning
+from repro.engine import multiplex, stream
+
+N_IN, N_HIDDEN, N_OUT = 64, 64, 6
+
+
+def _cfg() -> engine.EngineConfig:
+    return engine.EngineConfig(
+        elm=oselm.OSELMConfig(
+            n_in=N_IN, n_hidden=N_HIDDEN, n_out=N_OUT, variant="hash", ridge=1e-2
+        ),
+        prune=pruning.PruneConfig(min_trained=8),
+        drift=drift_mod.DriftConfig(),
+    )
+
+
+def _data(t, s, cfg, seed):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    xs = np.asarray(jax.numpy.tanh(jax.random.normal(kx, (t, s, cfg.elm.n_in))))
+    ys = np.asarray(jax.random.randint(ky, (t, s), 0, cfg.elm.n_out), np.int32)
+    return [x for x in xs], ys
+
+
+def _teacher(ys, latency, loss):
+    return stream.LatencyTeacher(
+        stream.array_labels(ys), latency=latency, loss_prob=loss, seed=0
+    )
+
+
+def _sequential_once(cfg, tenant_data, latency, loss, capacity):
+    t0 = time.perf_counter()
+    last = None
+    for xs_host, ys in tenant_data:
+        state, _, stats = stream.run(
+            engine.init_fleet(cfg, xs_host[0].shape[0]),
+            (x for x in xs_host),
+            cfg, _teacher(ys, latency, loss), mode="train_phase",
+            capacity=capacity, collect=False,
+        )
+        assert stats.reconciled, stats.summary()
+        last = state
+    jax.block_until_ready(last.elm.beta)
+    return time.perf_counter() - t0
+
+
+def _multiplex_once(cfg, tenant_data, latency, loss, capacity, backpressure):
+    tenants = [
+        multiplex.Tenant(
+            name=f"tenant{i}",
+            state=engine.init_fleet(cfg, xs_host[0].shape[0]),
+            ticks=(x for x in xs_host),
+            cfg=cfg,
+            teacher=_teacher(ys, latency, loss),
+            mode="train_phase",
+            capacity=capacity,
+            backpressure=backpressure,
+            collect=False,
+        )
+        for i, (xs_host, ys) in enumerate(tenant_data)
+    ]
+    t0 = time.perf_counter()
+    results, agg = multiplex.run(tenants)
+    jax.block_until_ready(results["tenant0"].state.elm.beta)
+    dt = time.perf_counter() - t0
+    for r in results.values():
+        assert r.stats.reconciled, r.stats.summary()
+    return dt, results, agg
+
+
+def bench(cfg, tenant_data, latency, loss, capacity, backpressure, iters=6):
+    """Best-of-N, interleaved (container scheduling drifts on a scale of
+    seconds; GC paused so gen-2 pauses don't pollute single iterations)."""
+    _sequential_once(cfg, tenant_data, latency, loss, capacity)  # warmup
+    _multiplex_once(cfg, tenant_data, latency, loss, capacity, backpressure)
+    best_seq = best_mux = float("inf")
+    best_results = None
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(iters):
+            best_seq = min(
+                best_seq, _sequential_once(cfg, tenant_data, latency, loss, capacity)
+            )
+            dt, results, agg = _multiplex_once(
+                cfg, tenant_data, latency, loss, capacity, backpressure
+            )
+            if dt < best_mux:
+                best_mux, best_results = dt, results
+    finally:
+        gc.enable()
+    return best_seq, best_mux, best_results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 2 tenants, S=16, lossy teacher")
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--backpressure", default="drop_oldest",
+                    choices=stream.BACKPRESSURE_POLICIES)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.out is None:
+        name = "BENCH_multiplex_quick.json" if args.quick else "BENCH_multiplex.json"
+        args.out = str(pathlib.Path(__file__).resolve().parent.parent / name)
+
+    # (S, T, teacher latency, loss) — quick is the ISSUE-3 CI smoke shape.
+    cases = (
+        [(16, 32, 2, 0.2)] if args.quick else [(512, 64, 0, 0.0), (512, 64, 4, 0.0)]
+    )
+    capacity = 16
+    rows = []
+    print(f"== Multiplexer throughput ({args.tenants} tenants, "
+          f"n_in={N_IN}, N={N_HIDDEN}, backpressure={args.backpressure}) ==")
+    for s, t, latency, loss in cases:
+        cfg = _cfg()
+        tenant_data = [_data(t, s, cfg, seed=i) for i in range(args.tenants)]
+        steps = args.tenants * t * s
+        best_seq, best_mux, results = bench(
+            cfg, tenant_data, latency, loss, capacity, args.backpressure
+        )
+        seq_sps, mux_sps = steps / best_seq, steps / best_mux
+        per_tenant = {
+            name: {
+                "tick_p50_ms": r.stats.tick_p50_ms,
+                "tick_p95_ms": r.stats.tick_p95_ms,
+                "labels_applied": r.stats.labels_applied,
+                "queries_issued": r.stats.queries_issued,
+                "queries_lost": r.stats.queries_lost,
+            }
+            for name, r in sorted(results.items())
+        }
+        rows.append({
+            "streams": s,
+            "ticks": t,
+            "tenants": args.tenants,
+            "quantum": multiplex.DEFAULT_QUANTUM,
+            "n_hidden": N_HIDDEN,
+            "teacher_latency_ticks": latency,
+            "teacher_loss_prob": loss,
+            "backpressure": args.backpressure,
+            "sequential_steps_per_s": seq_sps,
+            "multiplex_steps_per_s": mux_sps,
+            "multiplex_vs_sequential": mux_sps / seq_sps,
+            "per_tenant": per_tenant,
+        })
+        p95s = ", ".join(
+            f"{n} p50/p95 {d['tick_p50_ms']:.2f}/{d['tick_p95_ms']:.2f} ms"
+            for n, d in per_tenant.items()
+        )
+        print(f"S={s:4d} T={t:3d} lat={latency:2d} loss={loss:.1f}: "
+              f"sequential {seq_sps:>11,.0f} sps | multiplex {mux_sps:>11,.0f} sps "
+              f"({100 * mux_sps / seq_sps:5.1f}%) | {p95s}")
+
+    out = {"bench": "multiplex", "backend": jax.default_backend(), "rows": rows}
+    pathlib.Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -45,7 +45,7 @@ def main(argv=None):
     state = model_lib.init_serve_state(cfg, args.batch, max_len=args.ticks + 4)
     step = jax.jit(lambda p, st, t: model_lib.serve_step(p, st, t, cfg))
     apply_lbl = jax.jit(
-        lambda st, f, l, m: model_lib.serve_apply_labels(st, f, l, m, cfg)
+        lambda st, ctx, l, m: model_lib.serve_apply_labels(st, ctx, l, m, cfg)
     )
 
     labels = jnp.asarray(domains, jnp.int32)  # teacher's answer = true domain
@@ -55,9 +55,11 @@ def main(argv=None):
             [top_ids[d, (t + i) % 100] for i, d in enumerate(domains)]
         ).astype(np.int32)[:, None]
         logits, state, odl = step(params, state, jnp.asarray(tok))
-        q = odl["query_mask"]
-        # Teacher answers this tick's queries (synchronously, for clarity).
-        state = apply_lbl(state, odl["feats"], labels, q)
+        q = odl.queried
+        # Teacher answers this tick's queries (synchronously, for clarity);
+        # the GateOutput carries the query-time context the answer is
+        # judged against.
+        state = apply_lbl(state, odl, labels, q)
         window.append(float(jnp.mean(q.astype(jnp.float32))))
         if (t + 1) % 20 == 0:
             frac = np.mean(window[-20:])

@@ -71,17 +71,46 @@ Modes
 * ``mode="train_phase"`` — the §3 evaluation protocol: an explicit
   retraining phase, pruning always armed, optional per-stream
   ``teacher_available`` outage modelling.
+* ``mode="serve"``       — the serving cascade: live drift detector
+  (a drifting stream is forced to query — pruning condition 2), controller
+  always armed, no training-mode gating.  Exactly the ``gate`` decision
+  logic, so ``plan(mode='serve')``/``learn`` and ``gate``/``apply_labels``
+  are the same state machine (``launch/serve.py`` multiplexes the former;
+  ``models/model.py``'s fused decode step uses the latter).
+
+Multi-tenant multiplexer & backpressure
+---------------------------------------
+``multiplex.run(tenants)`` serves N independent fleets — each a
+``multiplex.Tenant`` with its own config, state, tick source, ``Teacher``,
+pending ring, and *backpressure policy* — from one process, round-robin
+with a ``quantum``-tick time slice (cache locality; results are
+quantum-invariant).  Tenants with the same ``(cfg, mode,
+donate)`` share a compiled executable through the bounded runner LRUs, so
+a tenant using an already-served config costs no compile.  The pending
+ring's saturation behavior is pluggable (``stream.BACKPRESSURE_POLICIES``):
+``drop_oldest`` (evict, metered), ``drop_newest`` (refuse the new ask),
+``block`` (defer the ask until a slot frees), and ``coalesce`` (merge a
+re-querying stream into its in-flight ticket — no duplicate teacher
+traffic).  Query accounting reconciles exactly: ``queries_issued ==
+labels_applied + queries_dropped + queries_lost (+ queries_coalesced)``.
+``engine.rpc.RpcTeacher`` speaks the same Teacher protocol over a real TCP
+socket with timeout→loss mapping, so the latency model is no longer the
+only teacher transport.
 
 Serving entry points (``gate`` / ``apply_labels``) remain for callers that
 carry their own features (``models/model.py``'s decode loop feeds backbone
-hidden states); ``launch/serve.py`` runs them against the same Teacher
-protocol and PendingRing as the stream runtime.
+hidden states): ``gate`` returns a ``GateOutput`` capturing the plan-time
+decision context (h/pred/confidence/theta), and ``apply_labels`` judges
+the — possibly delayed — teacher answer against exactly that context, the
+same contract as ``plan``/``learn``.  ``launch/serve.py`` multiplexes N
+tenant fleets over the decode loop with these same pieces.
 """
 
 from repro.engine.fleet import (  # noqa: F401
     EngineConfig,
     EngineState,
     FleetStepOutput,
+    GateOutput,
     PlanOutput,
     apply_labels,
     broadcast_streams,
@@ -99,4 +128,4 @@ from repro.engine.fleet import (  # noqa: F401
 
 # fleet must import first: its repro.core imports resolve the
 # core -> odl_head(alias) -> engine.scalar cycle before scalar/stream load.
-from repro.engine import scalar, stream  # noqa: E402,F401
+from repro.engine import multiplex, scalar, stream  # noqa: E402,F401

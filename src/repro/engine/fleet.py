@@ -20,7 +20,8 @@ Design rules:
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+import warnings
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -111,7 +112,7 @@ def plan(
     deliberately diverge (``StreamStats.queries_issued`` tracks the former;
     ``comm_volume_fraction`` reflects queries the controller observed).
     """
-    if mode not in ("algo1", "train_phase"):
+    if mode not in ("algo1", "train_phase", "serve"):
         raise ValueError(f"unknown engine mode {mode!r}")
     n_streams = x.shape[0]
     if teacher_available is None:
@@ -120,7 +121,23 @@ def plan(
     h, c, o = _predict(state, x, cfg)
     conf = pruning.confidence(o)
 
-    if mode == "algo1":
+    if mode == "serve":
+        # ``gate`` semantics for the streaming/multiplexed serving path:
+        # the drift detector runs live and a drifting stream is forced to
+        # query (the paper's pruning condition 2), the controller is always
+        # armed, and there is no training-mode gating — exactly the
+        # decision logic of ``gate``, so ``plan(mode='serve')`` + ``learn``
+        # is bit-for-bit ``gate`` + ``apply_labels``.
+        s = drift_mod.score(x, o, cfg.drift)
+        new_drift = drift_mod.update(state.drift, s, cfg.drift)
+        training = jnp.ones((n_streams,), jnp.bool_)
+        prune_st = state.prune
+        want_query = pruning.should_query(
+            prune_st, o, state.elm.count, new_drift.active, cfg.prune
+        )
+        queried = want_query & teacher_available
+        controller_on = teacher_available
+    elif mode == "algo1":
         # IsDrift / IsTrainDone: per-stream detector with hysteresis.
         s = drift_mod.score(x, o, cfg.drift)  # (S,)
         new_drift = drift_mod.update(state.drift, s, cfg.drift)
@@ -353,11 +370,31 @@ def run_fleet(
 # ---------------------------------------------------------------------------
 
 
+class GateOutput(NamedTuple):
+    """Plan-time decision context of one serving tick.
+
+    Everything ``apply_labels`` needs to judge a teacher answer that comes
+    back ticks later: the hidden activations the query trained on, the
+    local prediction/confidence the agreement check compares against, and
+    the threshold the query decision was made under.  Mirrors
+    ``PlanOutput`` for the ``gate``/``apply_labels`` serving split.
+    """
+
+    h: jnp.ndarray  # (S, N) hidden activations at query time
+    pred: jnp.ndarray  # (S,) int32 local prediction c
+    outputs: jnp.ndarray  # (S, m) raw outputs O
+    confidence: jnp.ndarray  # (S,) f32 p1 - p2 at query time
+    queried: jnp.ndarray  # (S,) bool — streams shipping feats to the teacher
+    theta: jnp.ndarray  # (S,) f32 threshold in force at query time
+    feats: jnp.ndarray  # (S, n_in) the raw features (for a real teacher RPC)
+    drift_active: jnp.ndarray  # (S,) bool
+
+
 def gate(
     state: EngineState,
     x: jnp.ndarray,  # (S, n_in) features, one per stream
     cfg: EngineConfig,
-) -> tuple[EngineState, dict]:
+) -> tuple[EngineState, GateOutput]:
     """Predict + decide which streams must consult the teacher.
 
     Runs the drift detector (a drifting stream is forced to query — the
@@ -366,16 +403,19 @@ def gate(
     streams (same split as ``plan``/``learn``: skip transitions belong to
     decision time, query transitions to answer time — so applying several
     deferred replies in one tick cannot multiply skip counts).  Labels
-    arrive later via ``apply_labels``.
+    arrive later via ``apply_labels``, which takes the returned
+    ``GateOutput`` so delayed replies are judged against *this* tick's
+    prediction/confidence/theta, not whatever the weights say by the time
+    the answer lands.
     """
     h, c, o = _predict(state, x, cfg)
-    del h
     conf = pruning.confidence(o)
     s = drift_mod.score(x, o, cfg.drift)
     new_drift = drift_mod.update(state.drift, s, cfg.drift)
     query_mask = pruning.should_query(
         state.prune, o, state.elm.count, new_drift.active, cfg.prune
     )
+    theta = pruning.theta_of(state.prune, cfg.prune)
     meter = state.meter.charge_query(x.shape[-1], query_mask)
     off = jnp.zeros_like(query_mask)
     new_prune = _tree_where(
@@ -386,41 +426,66 @@ def gate(
     new_state = sharding.constrain_fleet(
         state._replace(drift=new_drift, meter=meter, prune=new_prune)
     )
-    out = {
-        "pred": c,
-        "conf": conf,
-        "query_mask": query_mask,
-        "feats": x,
-        "outputs": o,
-        "drift_active": new_drift.active,
-    }
+    out = GateOutput(
+        h=h,
+        pred=c,
+        outputs=o,
+        confidence=conf,
+        queried=query_mask,
+        theta=theta,
+        feats=x,
+        drift_active=new_drift.active,
+    )
     return new_state, out
 
 
 def apply_labels(
     state: EngineState,
-    x: jnp.ndarray,  # (S, n_in) features captured at query time
+    ctx: Union[GateOutput, PlanOutput, jnp.ndarray],
     labels: jnp.ndarray,  # (S,) int32 teacher answers (valid where mask)
     mask: jnp.ndarray,  # (S,) bool — streams whose teacher answered
     cfg: EngineConfig,
 ) -> EngineState:
     """Asynchronous label application: masked rank-1 RLS + auto-theta step.
 
-    Only the answered streams (``mask``) transition the ladder — the
-    skip accounting for everyone else already happened in ``gate`` — so
-    calling this once per arrived reply (zero, one, or many per tick,
-    depending on teacher latency) keeps per-tick controller semantics.
+    ``ctx`` is the ``GateOutput`` (or ``PlanOutput``) captured when the
+    query was issued: the RLS update trains on the plan-time ``h`` and the
+    ladder judges agreement against the plan-time ``pred``/``confidence``
+    under the plan-time ``theta`` — exactly like ``learn``.  Recomputing
+    those from the *current* state (the pre-ISSUE-3 behavior) is wrong with
+    a laggy teacher: weights updated while the answer was in flight change
+    the prediction, so the agree/confidence judgment no longer describes
+    the decision the query belongs to.
+
+    Only the answered streams (``mask``) transition the ladder — the skip
+    accounting for everyone else already happened in ``gate`` — so calling
+    this once per arrived reply (zero, one, or many per tick, depending on
+    teacher latency) keeps per-tick controller semantics.
+
+    Passing the raw query-time features as ``ctx`` (the deprecated
+    recompute path) still works but emits a ``DeprecationWarning``.
     """
-    h, c, o = _predict(state, x, cfg)
-    conf = pruning.confidence(o)
-    agree = c == labels
+    if isinstance(ctx, (GateOutput, PlanOutput)):
+        h, pred, conf, theta = ctx.h, ctx.pred, ctx.confidence, ctx.theta
+    else:
+        warnings.warn(
+            "apply_labels(state, x, ...) with raw features recomputes "
+            "pred/confidence/theta from the *current* weights — stale-reply "
+            "semantics; pass the GateOutput from gate() instead.",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        h, pred, o = _predict(state, ctx, cfg)
+        conf = pruning.confidence(o)
+        theta = None
+    agree = pred == labels
     y = labels_mod.one_hot(labels, cfg.elm.n_out)
     new_elm = oselm.fleet_rank1_update_h(
         state.elm, h, y, cfg.elm, mask=mask.astype(jnp.float32)
     )
     new_prune = _tree_where(
         mask,
-        pruning.update(state.prune, mask, agree, conf, cfg.prune),
+        pruning.update(state.prune, mask, agree, conf, cfg.prune, theta=theta),
         state.prune,
     )
     return sharding.constrain_fleet(

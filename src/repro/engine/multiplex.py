@@ -1,0 +1,230 @@
+"""Multi-tenant stream multiplexer: N independent fleets in one process.
+
+The paper's deployment story is many edge devices sharing one teacher-side
+host: each tenant is an independent fleet — its own ``EngineConfig``,
+``EngineState``, tick source, ``Teacher``, pending-query ring, and
+backpressure policy — but they all run in a single process, sharing the
+engine's bounded compiled-runner LRUs (``stream._plan_runner`` /
+``_learn_runner`` / ``_learn_plan_runner`` and ``fleet._chunk_runner``).
+Tenants with the same ``(cfg, mode, donate)`` therefore share one compiled
+executable: adding a tenant with a config already being served costs no
+compile and no extra executable memory.
+
+Scheduling is round-robin with a ``quantum``-tick time slice (default 8):
+each tenant's ``StreamSession`` (``engine/stream.py``) advances by up to
+``quantum`` plan/ask/poll/learn cycles before the scheduler moves on —
+switching every tick would evict the tenant's state from cache on every
+switch.  Because a session's per-tenant op sequence does not depend on
+what the scheduler interleaves around it, a multiplexed tenant reproduces
+its solo ``stream.run`` bit-for-bit at any quantum (locked by
+``tests/test_multiplex.py``).
+Tenants whose tick source is exhausted are finished (drained) immediately;
+the multiplexer ends when every tenant has finished.
+
+Usage::
+
+    results, agg = multiplex.run([
+        multiplex.Tenant("edge-a", state_a, ticks_a, cfg_a, teacher_a),
+        multiplex.Tenant("edge-b", state_b, ticks_b, cfg_b, teacher_b,
+                         backpressure="coalesce"),
+    ])
+    results["edge-a"].state, results["edge-a"].stats.tick_p95_ms, ...
+
+``launch/serve.py`` drives this with ``--tenants`` / ``--backpressure``;
+``benchmarks/multiplex_bench.py`` measures per-tenant tick p50/p95 and
+aggregate steps/s against N sequential ``stream.run`` calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, NamedTuple, Optional
+
+from repro.engine import stream
+from repro.engine.types import EngineConfig, EngineState, FleetStepOutput
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One fleet behind the multiplexer.
+
+    ``name`` keys the result dict (must be unique).  Everything else is
+    exactly what ``stream.run`` takes — per tenant: its own config, state,
+    tick source, teacher, ring capacity, and backpressure policy
+    (``stream.BACKPRESSURE_POLICIES``).
+    """
+
+    name: str
+    state: EngineState
+    ticks: Iterable  # yields (S, n_in) feature arrays, one per tick
+    cfg: EngineConfig
+    teacher: stream.Teacher
+    mode: str = "algo1"
+    capacity: int = 64
+    backpressure: str = "drop_oldest"
+    collect: bool = True
+    donate: Optional[bool] = None
+
+
+class TenantResult(NamedTuple):
+    name: str
+    state: EngineState
+    outputs: Optional[FleetStepOutput]
+    stats: stream.StreamStats
+
+
+@dataclasses.dataclass
+class MultiplexStats:
+    """Aggregate view over one multiplexed run.
+
+    ``wall_s`` is the scheduler's wall time (shared by all tenants — each
+    tenant's own ``StreamStats.wall_s`` spans the whole multiplexed run,
+    so per-tenant ``steps_per_s`` is *not* additive; use
+    ``steps_per_s`` here for aggregate throughput).
+    """
+
+    n_tenants: int = 0
+    rounds: int = 0
+    stream_steps: int = 0
+    ticks: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def steps_per_s(self) -> float:
+        return self.stream_steps / self.wall_s if self.wall_s > 0 else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "n_tenants": self.n_tenants,
+            "rounds": self.rounds,
+            "ticks": self.ticks,
+            "stream_steps": self.stream_steps,
+            "steps_per_s": self.steps_per_s,
+            "wall_s": self.wall_s,
+            "caches": stream.cache_stats(),
+        }
+
+
+class _Slot:
+    """Scheduler-side bookkeeping for one tenant."""
+
+    # Drain polls allowed per scheduler slice: a drain poll is far cheaper
+    # than a real tick (no device dispatch), but a laggy teacher must not
+    # head-of-line block live tenants, so a draining tenant gets a bounded
+    # budget per round and resumes next round.
+    DRAIN_TICKS_PER_SLICE = 64
+    DRAIN_IDLE_SLEEP_S = 50e-6
+
+    def __init__(self, tenant: Tenant):
+        self.tenant = tenant
+        self.it = iter(tenant.ticks)
+        self.session = stream.StreamSession(
+            tenant.state,
+            tenant.cfg,
+            tenant.teacher,
+            mode=tenant.mode,
+            capacity=tenant.capacity,
+            backpressure=tenant.backpressure,
+            collect=tenant.collect,
+            donate=tenant.donate,
+        )
+        self.draining = False
+        self._drain_ticks = 0  # cumulative, capped at stream.MAX_DRAIN_TICKS
+        self.result: Optional[TenantResult] = None
+
+    def step(self, drain: bool, quantum: int) -> bool:
+        """Advance this tenant by up to ``quantum`` scheduler events (or
+        one bounded drain slice once its ticks are exhausted).  Returns
+        True while the tenant still wants scheduling."""
+        sess = self.session
+        if not self.draining:
+            for _ in range(quantum):
+                if not sess.started():
+                    x0 = next(self.it, None)
+                    if x0 is None:  # empty tick source: nothing to run
+                        self.draining = True
+                        break
+                    sess.start(x0)
+                    continue
+                nxt = next(self.it, None)
+                sess.advance(nxt)
+                if nxt is None:
+                    self.draining = True
+                    break
+            if not self.draining:
+                return True
+            if not drain:
+                self._finish()
+                return False
+        # Draining: one bounded slice per round, so other tenants keep
+        # ticking while this one waits out its teacher.  The cumulative cap
+        # keeps a broken always-in-flight teacher from pinning the
+        # scheduler forever (same bound a solo run's drain has).
+        self._drain_ticks += self.DRAIN_TICKS_PER_SLICE
+        if self._drain_ticks <= stream.MAX_DRAIN_TICKS and sess.drain_replies(
+            max_ticks=self.DRAIN_TICKS_PER_SLICE,
+            idle_sleep_s=self.DRAIN_IDLE_SLEEP_S,
+        ):
+            return True
+        self._finish()
+        return False
+
+    def _finish(self) -> None:
+        # Any draining already happened incrementally in step().
+        state, outs, stats = self.session.finish(drain=False)
+        self.result = TenantResult(
+            name=self.tenant.name, state=state, outputs=outs, stats=stats
+        )
+
+
+DEFAULT_QUANTUM = 8
+
+
+def run(
+    tenants: list[Tenant],
+    drain: bool = True,
+    quantum: int = DEFAULT_QUANTUM,
+) -> tuple[dict[str, TenantResult], MultiplexStats]:
+    """Multiplex every tenant's stream over this process, round-robin.
+
+    ``quantum`` is the scheduler time slice: how many consecutive ticks one
+    tenant runs before the scheduler moves on.  Switching tenants every
+    tick (quantum=1) evicts the previous tenant's state (P alone is
+    S·N²·4 bytes) from cache on every switch and costs ~15-45% aggregate
+    throughput at S=512; a few ticks per slice amortize that while keeping
+    per-tenant scheduling delay bounded by (n_tenants-1)·quantum ticks.
+    The per-tenant result is bit-for-bit identical for every quantum — only
+    wall-clock interleaving changes (a weighted/fairness scheduler is a
+    ROADMAP follow-on).
+
+    Returns ``(results, agg)``: ``results[name]`` is that tenant's
+    ``(state, outputs, stats)`` — identical to what a solo ``stream.run``
+    over the same inputs returns — and ``agg`` is the aggregate
+    ``MultiplexStats`` (true wall time, total steps).
+    """
+    if not tenants:
+        raise ValueError("multiplex.run needs at least one tenant")
+    if quantum < 1:
+        raise ValueError(f"quantum must be >= 1, got {quantum}")
+    names = [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"tenant names must be unique, got {names}")
+
+    slots = [_Slot(t) for t in tenants]
+    agg = MultiplexStats(n_tenants=len(tenants))
+    t0 = time.perf_counter()
+    live = list(slots)
+    while live:
+        agg.rounds += 1
+        live = [s for s in live if s.step(drain, quantum)]
+    agg.wall_s = time.perf_counter() - t0
+    for s in slots:
+        agg.stream_steps += s.result.stats.stream_steps
+        agg.ticks += s.result.stats.ticks
+    return {s.tenant.name: s.result for s in slots}, agg
+
+
+# The multiplexer's compiled-executable sharing is observable here: tenant
+# configs that hash equal hit the same LRU entries.
+cache_stats = stream.cache_stats

@@ -1,0 +1,301 @@
+"""RpcTeacher: the ``stream.Teacher`` protocol over a real TCP socket.
+
+``LatencyTeacher`` models the teacher round-trip in *ticks*; this module
+replaces the model with an actual network hop so the streaming runtime and
+the multiplexer can be exercised against a real transport: a label server
+on the other end of a socket, wall-clock latency, and a timeout → loss
+mapping (a reply that misses the deadline is treated exactly like a lost
+ticket — the runtime's ring entry drains as ``queries_lost``, and a
+straggler reply that limps in after its timeout is discarded, never
+applied).
+
+Wire protocol (loopback-grade, stdlib-only): newline-delimited JSON, one
+object per line.
+
+  request:  {"ticket": int, "tick": int, "mask": [bool, ...],
+             "feats": [[f, ...], ...]}
+  reply:    {"ticket": int, "labels": [int, ...], "answered": [bool, ...]}
+
+The bundled ``LabelServer`` answers deterministically —
+``label[s] = (7 * tick + s) % n_out`` — so round-trip tests can assert
+exact labels; a real deployment would put the pod-side backbone ensemble
+behind the same two message shapes.  Run it standalone::
+
+    PYTHONPATH=src python -m repro.engine.rpc --port 0 --n-out 6
+
+(``--port 0`` binds an ephemeral port and prints ``PORT <p>`` on stdout —
+that is what ``loopback_server`` parses), or self-test the full
+client/server round trip in one process pair::
+
+    PYTHONPATH=src python -m repro.engine.rpc --selftest
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import os
+import pathlib
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.engine.stream import TeacherReply
+
+
+def expected_label(tick: int, s: int, n_out: int) -> int:
+    """The deterministic rule ``LabelServer`` answers with."""
+    return (7 * tick + s) % n_out
+
+
+# ---------------------------------------------------------------------------
+# Server
+# ---------------------------------------------------------------------------
+
+
+class LabelServer:
+    """Threaded loopback label server (one thread per client connection)."""
+
+    def __init__(self, port: int = 0, n_out: int = 6, delay_s: float = 0.0,
+                 host: str = "127.0.0.1"):
+        self.n_out = n_out
+        self.delay_s = delay_s
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(8)
+        self.port = self._sock.getsockname()[1]
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+
+    def serve_forever(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                break
+            t = threading.Thread(target=self._client, args=(conn,), daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def start(self) -> "LabelServer":
+        t = threading.Thread(target=self.serve_forever, daemon=True)
+        t.start()
+        self._threads.append(t)
+        return self
+
+    def close(self) -> None:
+        self._stop.set()
+        with contextlib.suppress(OSError):
+            self._sock.close()
+
+    def _client(self, conn: socket.socket) -> None:
+        with conn, conn.makefile("rwb") as f:
+            for line in f:
+                try:
+                    req = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if self.delay_s:
+                    time.sleep(self.delay_s)
+                mask = req.get("mask", [])
+                labels = [
+                    expected_label(req.get("tick", 0), s, self.n_out)
+                    for s in range(len(mask))
+                ]
+                out = {"ticket": req["ticket"], "labels": labels, "answered": mask}
+                try:
+                    f.write((json.dumps(out) + "\n").encode())
+                    f.flush()
+                except OSError:
+                    break
+
+
+# ---------------------------------------------------------------------------
+# Client
+# ---------------------------------------------------------------------------
+
+
+class RpcTeacher:
+    """``stream.Teacher`` over a TCP socket, with timeout → loss mapping.
+
+    ``ask`` serializes the tick's features + mask and sends them; a reader
+    thread validates each reply against its ticket's deadline *at arrival
+    time* and queues the survivors in an inbox that ``poll`` drains — so a
+    reply that made the deadline is never lost to a late poll (e.g. a tick
+    stalled behind an XLA compile).  A ticket unanswered for ``timeout_s``
+    wall seconds leaves ``in_flight()`` and is mapped to loss: the
+    runtime's pending ring entry is never claimed (it drains as
+    ``queries_lost``), and a reply that misses its deadline is dropped at
+    arrival (counted in ``timed_out``) — never delivered, so a stale
+    straggler cannot train the fleet.
+    """
+
+    def __init__(self, host: str, port: int, timeout_s: float = 5.0,
+                 connect_timeout_s: float = 5.0):
+        self.timeout_s = timeout_s
+        self._sock = socket.create_connection((host, port), timeout=connect_timeout_s)
+        self._wfile = self._sock.makefile("wb")
+        self._lock = threading.Lock()
+        self._next_ticket = 0
+        # ticket -> wall deadline; present == still in flight.
+        self._pending: dict[int, float] = {}
+        self._inbox: list[TeacherReply] = []
+        self.timed_out = 0  # tickets whose reply missed (or never made) the deadline
+        self._reader = threading.Thread(target=self._read_loop, daemon=True)
+        self._reader.start()
+
+    def _read_loop(self) -> None:
+        try:
+            with self._sock.makefile("rb") as f:
+                for line in f:
+                    try:
+                        msg = json.loads(line)
+                    except json.JSONDecodeError:
+                        continue
+                    reply = TeacherReply(
+                        ticket=int(msg["ticket"]),
+                        labels=np.asarray(msg["labels"], np.int32),
+                        answered=np.asarray(msg["answered"], bool),
+                    )
+                    arrived = time.monotonic()
+                    with self._lock:
+                        deadline = self._pending.pop(reply.ticket, None)
+                        if deadline is None:
+                            # Unknown ticket, or already expired (and
+                            # counted) by _expire.
+                            continue
+                        if arrived > deadline:
+                            self.timed_out += 1  # straggler: timeout -> loss
+                            continue
+                        self._inbox.append(reply)
+        except (OSError, ValueError):
+            pass  # socket closed
+
+    def ask(self, feats, mask, tick: int) -> int:
+        with self._lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._pending[ticket] = time.monotonic() + self.timeout_s
+        req = {
+            "ticket": ticket,
+            "tick": int(tick),
+            "mask": np.asarray(mask, bool).tolist(),
+            "feats": np.asarray(feats, np.float32).tolist(),
+        }
+        try:
+            self._wfile.write((json.dumps(req) + "\n").encode())
+            self._wfile.flush()
+        except OSError:
+            # Dead socket == permanent outage: the ticket stays pending
+            # until its deadline, then maps to loss like any other timeout.
+            pass
+        return ticket
+
+    def _expire(self) -> None:
+        now = time.monotonic()
+        with self._lock:
+            dead = [t for t, dl in self._pending.items() if dl < now]
+            for t in dead:
+                del self._pending[t]
+                self.timed_out += 1
+
+    def poll(self, tick: int) -> list[TeacherReply]:
+        self._expire()  # never-arrived tickets past their deadline -> loss
+        with self._lock:
+            out, self._inbox = self._inbox, []
+        return out
+
+    def in_flight(self) -> int:
+        self._expire()
+        with self._lock:
+            return len(self._pending)
+
+    def close(self) -> None:
+        with contextlib.suppress(OSError):
+            self._wfile.close()
+        with contextlib.suppress(OSError):
+            self._sock.close()
+
+    def __enter__(self) -> "RpcTeacher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# Loopback subprocess helper
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def loopback_server(n_out: int = 6, delay_s: float = 0.0):
+    """Spawn ``python -m repro.engine.rpc`` as a subprocess label server on
+    an ephemeral loopback port; yields ``(host, port)`` and tears the
+    process down on exit."""
+    src_root = str(pathlib.Path(__file__).resolve().parents[2])
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.engine.rpc", "--port", "0",
+         "--n-out", str(n_out), "--delay-ms", str(int(delay_s * 1000))],
+        stdout=subprocess.PIPE, env=env, text=True,
+    )
+    try:
+        line = proc.stdout.readline()
+        if not line.startswith("PORT "):
+            raise RuntimeError(f"label server failed to start: {line!r}")
+        yield "127.0.0.1", int(line.split()[1])
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10)
+
+
+def _selftest() -> int:
+    """One full round trip over a subprocess loopback server (CI smoke)."""
+    s, n_out = 4, 6
+    feats = np.zeros((s, 3), np.float32)
+    mask = np.ones((s,), bool)
+    with loopback_server(n_out=n_out) as (host, port):
+        with RpcTeacher(host, port, timeout_s=10.0) as teacher:
+            ticket = teacher.ask(feats, mask, tick=3)
+            deadline = time.monotonic() + 10.0
+            replies = []
+            while not replies and time.monotonic() < deadline:
+                replies = teacher.poll(0)
+                time.sleep(0.01)
+            assert replies and replies[0].ticket == ticket, "no reply"
+            want = [expected_label(3, i, n_out) for i in range(s)]
+            assert replies[0].labels.tolist() == want, replies[0].labels
+            assert teacher.in_flight() == 0
+    print("rpc selftest OK:", want)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--n-out", type=int, default=6)
+    ap.add_argument("--delay-ms", type=int, default=0,
+                    help="server-side per-request delay (timeout testing)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="spawn a loopback server and round-trip one ask")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        return _selftest()
+    server = LabelServer(port=args.port, n_out=args.n_out,
+                         delay_s=args.delay_ms / 1000.0)
+    print(f"PORT {server.port}", flush=True)
+    server.serve_forever()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,19 +15,48 @@ Pieces:
 * ``Teacher`` protocol — ``ask(feats, mask, tick) -> ticket`` and
   ``poll(tick) -> [TeacherReply]`` (plus ``in_flight()`` so the runtime
   knows when draining is pointless).  ``LatencyTeacher`` implements it with
-  a tick-granular latency / jitter / loss / permanent-outage model;
-  ``array_labels`` adapts a materialized label array (the paper's protocol,
-  where ground truth plays the teacher).
+  a tick-granular latency / jitter / loss / partial-answer /
+  permanent-outage model; ``array_labels`` adapts a materialized label
+  array (the paper's protocol, where ground truth plays the teacher);
+  ``engine.rpc.RpcTeacher`` implements the same protocol over a real TCP
+  socket with wall-clock timeout → loss mapping.
 * ``PendingRing`` — fixed-capacity buffer of in-flight tickets holding the
   plan-time features (``h``), prediction, and confidence until the answer
-  arrives.  Overflow evicts the oldest ticket (metered), so memory stays
-  bounded no matter how laggy the teacher; answers for evicted tickets are
-  counted as orphaned and dropped.
+  arrives.  What happens when it saturates is a pluggable *backpressure
+  policy* (``BACKPRESSURE_POLICIES``):
+
+  - ``drop_oldest`` (default) — evict the oldest in-flight ticket, metered;
+    its late answer is counted as orphaned.
+  - ``drop_newest`` — refuse the new ask; the tick's queries are dropped.
+  - ``block``      — defer the ask to a later tick: the plan context waits
+    in a bounded host-side queue and is submitted as ring slots free up
+    (FIFO, so ask order is preserved).
+  - ``coalesce``   — a stream that re-queries while it already has a query
+    in flight is merged into that in-flight ticket (no duplicate teacher
+    traffic; the in-flight answer settles the decision it belongs to);
+    only the uncovered remainder is asked, evicting the oldest on
+    overflow.
+
+* ``StreamSession`` — one stream's (one *tenant's*) runtime as an
+  explicit state machine: ``start(x0)`` dispatches the first plan,
+  ``advance(next_tick)`` finishes the current tick (ask → poll → learn,
+  fused with the next tick's plan), ``finish()`` drains and returns
+  ``(state, outputs, stats)``.  ``run`` drives a single session;
+  ``engine.multiplex`` interleaves many sessions — with per-tenant
+  configs, teachers, rings, and backpressure — over one process, sharing
+  the bounded compiled-runner LRUs below.
 * ``run`` — the double-buffered tick loop: the next tick is pulled from the
   iterator and shipped to the device while the current tick's ``plan``
   computes; answered labels apply out of order through the engine's masked
   ``learn``.  Per-tick wall latency and ask→answer label latency are
   recorded in ``StreamStats`` (p50/p95).
+
+Query accounting reconciles exactly: every stream-query the plan decided
+to issue ends in exactly one of ``labels_applied`` (answer applied),
+``queries_dropped`` (backpressure victim), ``queries_lost`` (teacher loss,
+outage, timeout, or partial-answer residue), or ``queries_coalesced``
+(merged into an in-flight ticket; zero unless the policy is
+``coalesce``) — ``StreamStats.reconciled`` states the identity.
 
 With a zero-latency teacher the runtime reproduces ``run_fleet`` outputs
 and final state bit-for-bit (locked by ``tests/test_stream.py``): ``plan``
@@ -53,10 +82,21 @@ from repro.engine.types import EngineConfig, EngineState, FleetStepOutput
 # tickets forever must not hang the runtime (serve.py uses it too).
 MAX_DRAIN_TICKS = 1_000_000
 
+# Sleep between empty drain polls while replies are still in flight.
+# Tick-granular teachers (LatencyTeacher) resolve by tick count, so this
+# costs at most a few ms per drain; wall-clock teachers (RpcTeacher) need
+# the drain to wait out real network latency without busy-spinning a core
+# — and without burning through MAX_DRAIN_TICKS before the reply (or its
+# timeout) can land.
+DRAIN_IDLE_SLEEP_S = 200e-6
+
 # Latency distributions keep a sliding window: long-running servers must
 # not grow per-tick history without bound (same class of fix as the
 # bounded PendingRing and runner LRUs).  p50/p95 reflect recent ticks.
 STATS_WINDOW = 4096
+
+# Pluggable pending-ring saturation policies (see module docstring).
+BACKPRESSURE_POLICIES = ("drop_oldest", "drop_newest", "block", "coalesce")
 
 
 class TeacherReply(NamedTuple):
@@ -73,7 +113,9 @@ class Teacher(Protocol):
 
     def ask(self, feats, mask: np.ndarray, tick: int) -> int:
         """Submit one query batch (feats (S, n_in), mask (S,) bool marks the
-        streams actually querying).  Returns a ticket id."""
+        streams actually querying).  ``tick`` is the tick the query is
+        *about* — the current tick, except for asks the ``block`` policy
+        deferred, which keep their origin tick.  Returns a ticket id."""
         ...
 
     def poll(self, tick: int) -> list[TeacherReply]:
@@ -109,15 +151,18 @@ class LatencyTeacher:
     Each ``ask`` becomes one in-flight ticket answered ``latency`` ticks
     later, plus a uniform per-ticket jitter in [0, jitter] — so with jitter
     > 0 answers arrive out of order.  A ``loss_prob`` fraction of tickets
-    is silently lost (never answered), and ``outage_after >= t`` kills
-    every ticket asked at or after tick t — the paper's permanent-outage
-    fault case ("queries will be retried later or skipped").
+    is silently lost (never answered), ``partial_prob`` drops each asked
+    *stream* from its reply independently (a partially answered ticket —
+    the residue is metered as ``queries_lost``), and ``outage_after >= t``
+    kills every ticket asked at or after tick t — the paper's permanent-
+    outage fault case ("queries will be retried later or skipped").
     """
 
     label_fn: LabelFn
     latency: int = 0
     jitter: int = 0
     loss_prob: float = 0.0
+    partial_prob: float = 0.0
     outage_after: Optional[int] = None
     seed: int = 0
 
@@ -138,8 +183,12 @@ class LatencyTeacher:
             due = tick + self.latency
             if self.jitter:
                 due += int(self._rng.integers(0, self.jitter + 1))
+            answered = np.asarray(mask, bool)
+            if self.partial_prob > 0.0:
+                keep = self._rng.uniform(size=answered.shape) >= self.partial_prob
+                answered = answered & keep
             labels = np.asarray(self.label_fn(tick, feats), np.int32)
-            self._inbox.append((due, ticket, np.asarray(mask, bool), labels))
+            self._inbox.append((due, ticket, answered, labels))
         return ticket
 
     def poll(self, tick):
@@ -163,6 +212,15 @@ class PendingTicket(NamedTuple):
     plan: fleet.PlanOutput  # device arrays captured at query time
 
 
+class DeferredAsk(NamedTuple):
+    """A ``block``-policy ask waiting for a free ring slot."""
+
+    tick: int
+    x: object  # the tick's features (whatever the iterator yielded)
+    queried: np.ndarray  # (S,) bool
+    plan: fleet.PlanOutput
+
+
 class PendingRing:
     """Fixed-capacity ordered map ticket -> entry.
 
@@ -179,6 +237,9 @@ class PendingRing:
     def __len__(self):
         return len(self._slots)
 
+    def full(self) -> bool:
+        return len(self._slots) >= self.capacity
+
     def push(self, ticket: int, entry):
         dropped = None
         if len(self._slots) >= self.capacity:
@@ -188,6 +249,10 @@ class PendingRing:
 
     def pop(self, ticket: int):
         return self._slots.pop(ticket, None)
+
+    def entries(self):
+        """Live entries, oldest first (read-only view for coverage scans)."""
+        return self._slots.values()
 
     def drain(self):
         """Remove and return all entries (oldest first)."""
@@ -202,17 +267,29 @@ def _percentile(xs, q: float) -> float:
 
 @dataclasses.dataclass
 class StreamStats:
-    """Counters + latency distributions of one ``run`` (or serving loop)."""
+    """Counters + latency distributions of one ``run`` (or serving loop).
+
+    Query accounting (stream-queries, i.e. mask sums): every query the plan
+    decided to issue lands in exactly one terminal bucket, so
+    ``queries_issued == labels_applied + queries_dropped + queries_lost +
+    queries_coalesced`` always holds (``reconciled``).  With any policy but
+    ``coalesce`` the last term is zero and the identity is the three-term
+    one from ISSUE 3.
+    """
 
     ticks: int = 0
     stream_steps: int = 0
-    tickets_issued: int = 0
-    queries_issued: int = 0  # stream-queries (mask sum over all asks)
+    tickets_issued: int = 0  # teacher.ask calls actually made
+    queries_issued: int = 0  # stream-queries the plan decided to issue
     labels_applied: int = 0  # stream-labels applied through ``learn``
-    tickets_dropped: int = 0  # evicted by ring overflow
+    tickets_dropped: int = 0  # evicted / refused / expired by backpressure
     queries_dropped: int = 0
     replies_orphaned: int = 0  # answered after their ticket was evicted
-    tickets_lost: int = 0  # never answered (teacher loss / outage)
+    tickets_lost: int = 0  # never answered (teacher loss / outage / timeout)
+    queries_lost: int = 0  # incl. the residue of partially answered tickets
+    tickets_coalesced: int = 0  # asks merged (at least partly) into in-flight
+    queries_coalesced: int = 0  # stream-queries settled by an in-flight ticket
+    asks_deferred: int = 0  # ``block``: asks that waited for a ring slot
     wall_s: float = 0.0
     tick_ms: "collections.deque" = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=STATS_WINDOW)
@@ -241,6 +318,16 @@ class StreamStats:
     def steps_per_s(self) -> float:
         return self.stream_steps / self.wall_s if self.wall_s > 0 else 0.0
 
+    @property
+    def reconciled(self) -> bool:
+        """The query-accounting identity (see class docstring)."""
+        return self.queries_issued == (
+            self.labels_applied
+            + self.queries_dropped
+            + self.queries_lost
+            + self.queries_coalesced
+        )
+
     def summary(self) -> dict:
         return {
             "ticks": self.ticks,
@@ -253,6 +340,11 @@ class StreamStats:
             "queries_dropped": self.queries_dropped,
             "replies_orphaned": self.replies_orphaned,
             "tickets_lost": self.tickets_lost,
+            "queries_lost": self.queries_lost,
+            "tickets_coalesced": self.tickets_coalesced,
+            "queries_coalesced": self.queries_coalesced,
+            "asks_deferred": self.asks_deferred,
+            "queries_reconciled": self.reconciled,
             "tick_p50_ms": self.tick_p50_ms,
             "tick_p95_ms": self.tick_p95_ms,
             "label_latency_p50": self.label_latency_p50,
@@ -266,6 +358,11 @@ class StreamStats:
 # ``_replace`` (zero-copy).  Returning the full EngineState would make XLA
 # materialize a fresh copy of every pass-through leaf each tick — P alone
 # is S·N²·4 bytes, which at S=1024 dwarfs the tick's real compute.
+#
+# The lru_caches are keyed on (cfg, mode, donate), so *tenants* of the
+# multiplexer (engine/multiplex.py) that share a config share the same
+# compiled executable — the whole point of multiplexing fleets over one
+# process instead of one process per fleet.
 
 @functools.lru_cache(maxsize=fleet.RUNNER_CACHE_SIZE)
 def _plan_runner(cfg: EngineConfig, mode: str, donate: bool):
@@ -332,6 +429,370 @@ def cache_stats() -> dict:
     return out
 
 
+def _default_ship():
+    # Off-CPU, ship the next tick to the device eagerly so the transfer
+    # overlaps the in-flight dispatch; on CPU the eager path is pure Python
+    # overhead (~0.5 ms/call) and pjit's native conversion is far cheaper.
+    return (lambda a: a) if jax.default_backend() == "cpu" else jax.device_put
+
+
+class StreamSession:
+    """One stream's (one tenant's) async-teacher runtime as a state machine.
+
+    Lifecycle::
+
+        sess = StreamSession(state, cfg, teacher, ...)
+        sess.start(x0)          # dispatch the first tick's plan
+        sess.advance(x1)        # finish tick 0 (ask/poll/learn), plan tick 1
+        ...
+        sess.advance(None)      # finish the last tick (no next plan)
+        state, outs, stats = sess.finish()   # drain + accounting + outputs
+
+    ``run`` drives exactly this sequence for a single session;
+    ``engine.multiplex.run`` interleaves many sessions round-robin so N
+    tenants share one process (and, via the bounded runner LRUs, one
+    compiled executable per distinct ``(cfg, mode, donate)``).  Because the
+    per-tenant op sequence is identical either way, a multiplexed tenant
+    reproduces its solo ``run`` bit-for-bit.
+
+    ``backpressure`` picks the ring-saturation policy (see module
+    docstring / ``BACKPRESSURE_POLICIES``).
+    """
+
+    def __init__(
+        self,
+        state: EngineState,
+        cfg: EngineConfig,
+        teacher: Teacher,
+        mode: str = "algo1",
+        capacity: int = 64,
+        backpressure: str = "drop_oldest",
+        collect: bool = True,
+        donate: Optional[bool] = None,
+        stats: Optional[StreamStats] = None,
+        ship: Optional[Callable] = None,
+    ):
+        if backpressure not in BACKPRESSURE_POLICIES:
+            raise ValueError(
+                f"unknown backpressure policy {backpressure!r}; "
+                f"choose one of {BACKPRESSURE_POLICIES}"
+            )
+        if donate is None:
+            donate = True
+        if donate:
+            # Own the buffers we are about to donate tick after tick; the
+            # caller's state must survive the run.
+            state = jax.tree.map(jnp.copy, state)
+        self.state = state
+        self.cfg = cfg
+        self.teacher = teacher
+        self.mode = mode
+        self.backpressure = backpressure
+        self.collect = collect
+        self.stats = stats if stats is not None else StreamStats()
+        self.ring = PendingRing(capacity)
+        self.ship = ship if ship is not None else _default_ship()
+        self._plan_fn = _plan_runner(cfg, mode, donate)
+        self._learn_fn = _learn_runner(cfg, donate)
+        self._fused_fn = _learn_plan_runner(cfg, mode, donate)
+        # ``block``: asks waiting for a ring slot (bounded like the ring;
+        # overflow drops the oldest deferred ask, metered).
+        self._deferred: "collections.deque[DeferredAsk]" = collections.deque()
+        self._cols: dict[str, list] = {
+            k: []
+            for k in ("pred", "outputs", "queried", "theta", "confidence",
+                      "mode_training")
+        }
+        self._trained_rows: list[np.ndarray] = []
+        self._full_mask_dev = None  # cached device-side all-True apply mask
+        self._x = None  # current tick's features (plan dispatched, not asked)
+        self._p = None  # current tick's PlanOutput
+        self.t = 0
+        self._t_start: Optional[float] = None
+        self._finished = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def started(self) -> bool:
+        return self._t_start is not None
+
+    def start(self, x0) -> None:
+        """Dispatch the first tick's plan (nothing pending yet)."""
+        assert not self.started(), "session already started"
+        self._t_start = time.perf_counter()
+        x0 = self.ship(x0)
+        (new_prune, new_drift, new_meter), p = self._plan_fn(
+            self.state.elm, self.state.prune, self.state.drift, self.state.meter, x0
+        )
+        self.state = self.state._replace(
+            prune=new_prune, drift=new_drift, meter=new_meter
+        )
+        self._x, self._p = x0, p
+
+    def advance(self, nxt) -> None:
+        """Finish the current tick (ask → poll → learn) and plan ``nxt``.
+
+        ``nxt`` is the next tick's features (shipped here) or None when the
+        iterator is exhausted — the learn of any same-tick replies then runs
+        unfused.  Mirrors one iteration of the double-buffered ``run`` loop.
+        """
+        x, p = self._x, self._p
+        assert p is not None, "advance() before start()"
+        t = self.t
+        t0 = time.perf_counter()
+        if nxt is not None:
+            nxt = self.ship(nxt)
+        queried_host = np.asarray(p.queried)  # host syncs on tick t here
+        if self.collect:
+            for k in self._cols:
+                self._cols[k].append(np.asarray(getattr(p, k)))
+            self._trained_rows.append(np.zeros(queried_host.shape, bool))
+        n_q = int(queried_host.sum())
+        if n_q:
+            # Decision-time metering: the comm meter already charged these
+            # queries inside plan; every one of them must end in exactly one
+            # of applied / dropped / lost / coalesced.
+            self.stats.queries_issued += n_q
+            self._submit(x, queried_host, p, t)
+        applies = [
+            a
+            for a in (self._claim(r, t) for r in self.teacher.poll(t))
+            if a is not None
+        ]
+        # Replies just freed ring slots: submit deferred (``block``) asks.
+        self._flush_deferred(t)
+        if nxt is not None:
+            # Steady state: fuse the last reply's learn with the next tick's
+            # plan into one dispatch (earlier replies, if any, apply first,
+            # so all of tick t's answers land before tick t+1 is planned).
+            if applies:
+                for args in applies[:-1]:
+                    self._learn(args)
+                (elm2, prune2, drift2, meter2), p_next = self._fused_fn(
+                    self.state.elm, self.state.prune, self.state.drift,
+                    self.state.meter, *applies[-1], nxt,
+                )
+                self.state = EngineState(
+                    elm=elm2, prune=prune2, drift=drift2, meter=meter2
+                )
+            else:
+                (new_prune, new_drift, new_meter), p_next = self._plan_fn(
+                    self.state.elm, self.state.prune, self.state.drift,
+                    self.state.meter, nxt
+                )
+                self.state = self.state._replace(
+                    prune=new_prune, drift=new_drift, meter=new_meter
+                )
+        else:
+            for args in applies:
+                self._learn(args)
+            p_next = None
+        self.stats.ticks += 1
+        self.stats.stream_steps += int(np.shape(x)[0])
+        self.stats.tick_ms.append((time.perf_counter() - t0) * 1e3)
+        self.t += 1
+        self._x, self._p = nxt, p_next
+
+    def drain_replies(
+        self,
+        max_ticks: int = MAX_DRAIN_TICKS,
+        idle_sleep_s: float = DRAIN_IDLE_SLEEP_S,
+    ) -> bool:
+        """Wait out in-flight replies after the tick source is exhausted.
+
+        Polls while *either* the ring still holds tickets *or* the teacher
+        still has replies in flight — a reply whose ticket was evicted must
+        still be polled so ``replies_orphaned`` meters it (polling only
+        while both held silently discarded those).  Deferred (``block``)
+        asks keep flushing as slots free up.  Stops as soon as nothing more
+        can ever arrive.
+
+        Returns True when the ``max_ticks`` budget ran out with work
+        possibly still in flight (the caller may resume — the multiplexer
+        drains one bounded slice per scheduler round), False when the
+        drain is complete.
+        """
+        drained = 0
+        while len(self.ring) or self._deferred or self.teacher.in_flight() > 0:
+            if drained >= max_ticks:
+                return True
+            replies = self._poll_and_apply()
+            self._flush_deferred(self.t)
+            self.t += 1
+            drained += 1
+            if self.teacher.in_flight() == 0 and not replies:
+                # A threaded teacher (RpcTeacher) may resolve a ticket
+                # *between* the poll above and the in_flight check — the
+                # reply is already pollable even though in-flight just hit
+                # zero.  Poll once more before concluding nothing can ever
+                # arrive; only then are ring leftovers lost for good.
+                if not self._poll_and_apply():
+                    break
+            elif not replies and idle_sleep_s > 0:
+                time.sleep(idle_sleep_s)
+        return False
+
+    def _poll_and_apply(self) -> list[TeacherReply]:
+        replies = self.teacher.poll(self.t)
+        for reply in replies:
+            args = self._claim(reply, self.t)
+            if args is not None:
+                self._learn(args)
+        return replies
+
+    def finish(
+        self, drain: bool = True
+    ) -> tuple[EngineState, Optional[FleetStepOutput], StreamStats]:
+        """Drain, settle terminal accounting, and build stacked outputs."""
+        assert self._p is None, "finish() with a planned tick still pending"
+        if self._finished:
+            raise RuntimeError("session already finished")
+        self._finished = True
+        if drain:
+            self.drain_replies()
+        for ent in self.ring.drain():
+            self.stats.tickets_lost += 1
+            self.stats.queries_lost += int(ent.queried.sum())
+        for d in self._deferred:
+            # ``block`` asks that never got a slot: the queries never hit
+            # the wire — backpressure dropped them.
+            self.stats.tickets_dropped += 1
+            self.stats.queries_dropped += int(d.queried.sum())
+        self._deferred.clear()
+        if self._t_start is not None:
+            self.stats.wall_s += time.perf_counter() - self._t_start
+        outs = None
+        if self.collect and self._cols["pred"]:
+            outs = FleetStepOutput(
+                pred=np.stack(self._cols["pred"]),
+                outputs=np.stack(self._cols["outputs"]),
+                queried=np.stack(self._cols["queried"]),
+                trained=np.stack(self._trained_rows),
+                theta=np.stack(self._cols["theta"]),
+                confidence=np.stack(self._cols["confidence"]),
+                mode_training=np.stack(self._cols["mode_training"]),
+            )
+        return self.state, outs, self.stats
+
+    # -- internals ---------------------------------------------------------
+
+    def _ask(self, x, queried: np.ndarray, p, t: int):
+        """One actual teacher.ask + ring push (evicting oldest, metered)."""
+        ticket = self.teacher.ask(x, queried, t)
+        self.stats.tickets_issued += 1
+        dropped = self.ring.push(ticket, PendingTicket(t, queried, p))
+        if dropped is not None:
+            self.stats.tickets_dropped += 1
+            self.stats.queries_dropped += int(dropped.queried.sum())
+
+    def _submit(self, x, queried: np.ndarray, p, t: int) -> None:
+        """Route one tick's decided queries through the backpressure policy."""
+        policy = self.backpressure
+        if policy == "coalesce":
+            # Streams already covered by an in-flight ticket are merged into
+            # it: the in-flight answer settles the decision it belongs to,
+            # and no duplicate query hits the wire.
+            entries = list(self.ring.entries())  # oldest first
+            cover = np.zeros_like(queried)
+            for ent in entries:
+                cover |= ent.queried
+            rest = queried & ~cover
+            if rest.any() and self.ring.full() and entries:
+                # The residual ask below will evict the oldest in-flight
+                # ticket, so its coverage can no longer settle anything:
+                # streams only it covered must ride the new ticket, not be
+                # credited as coalesced against a ticket that is about to
+                # become an orphan.
+                cover = np.zeros_like(queried)
+                for ent in entries[1:]:
+                    cover |= ent.queried
+                rest = queried & ~cover
+            merged = queried & cover
+            n_m = int(merged.sum())
+            if n_m:
+                self.stats.tickets_coalesced += 1
+                self.stats.queries_coalesced += n_m
+            if rest.any():
+                self._ask(x, rest, p, t)
+            return
+        if policy == "drop_newest" and self.ring.full():
+            self.stats.tickets_dropped += 1
+            self.stats.queries_dropped += int(queried.sum())
+            return
+        if policy == "block" and (self.ring.full() or self._deferred):
+            # FIFO: never let a new ask jump a deferred one.
+            self.stats.asks_deferred += 1
+            self._deferred.append(DeferredAsk(t, x, queried, p))
+            if len(self._deferred) > self.ring.capacity:
+                d = self._deferred.popleft()
+                self.stats.tickets_dropped += 1
+                self.stats.queries_dropped += int(d.queried.sum())
+            return
+        self._ask(x, queried, p, t)
+
+    def _flush_deferred(self, now: int) -> None:
+        del now
+        while self._deferred and not self.ring.full():
+            d = self._deferred.popleft()
+            # Ask with the ORIGIN tick — the tick the query is about — so
+            # the ring entry marks the right `trained` row, label latency
+            # meters end-to-end from the decision, and a ground-truth
+            # teacher (array_labels) looks up the right tick's labels.
+            self._ask(d.x, d.queried, d.plan, d.tick)
+
+    def _claim(self, reply: TeacherReply, now: int):
+        """Resolve a reply against the ring; returns learn args or None,
+        with all drop/orphan/loss accounting applied."""
+        stats = self.stats
+        ent = self.ring.pop(reply.ticket)
+        if ent is None:
+            stats.replies_orphaned += 1
+            return None
+        asked = int(ent.queried.sum())
+        mask = ent.queried & np.asarray(reply.answered, bool)
+        n = int(mask.sum())
+        if n == 0:
+            # The teacher answered the ticket but covered none of its asked
+            # streams — those queries are gone for good; meter the ticket
+            # and every one of its queries as lost so the accounting
+            # identity holds.
+            stats.tickets_lost += 1
+            stats.queries_lost += asked
+            return None
+        stats.labels_applied += n
+        # Partial answer: the unanswered residue of this ticket will never
+        # get labels — meter it now, at the only moment it is knowable.
+        stats.queries_lost += asked - n
+        stats.label_latency_ticks.append(now - ent.tick)
+        if self.collect and ent.tick < len(self._trained_rows):
+            self._trained_rows[ent.tick] |= mask
+        if n == mask.shape[0]:
+            # Steady state (everyone queried, everyone answered): reuse one
+            # device-resident mask instead of a fresh upload per tick.
+            if self._full_mask_dev is None or self._full_mask_dev.shape != mask.shape:
+                self._full_mask_dev = jnp.ones(mask.shape, jnp.bool_)
+            mask_dev = self._full_mask_dev
+        else:
+            mask_dev = jnp.asarray(mask)
+        p = ent.plan
+        return (
+            p.h,
+            self.ship(np.asarray(reply.labels, np.int32)),
+            p.pred,
+            p.confidence,
+            mask_dev,
+            p.controller_on,
+            p.theta,
+        )
+
+    def _learn(self, args) -> None:
+        new_elm, new_prune = self._learn_fn(
+            self.state.elm, self.state.prune, self.state.drift, self.state.meter,
+            *args
+        )
+        self.state = self.state._replace(elm=new_elm, prune=new_prune)
+
+
 def run(
     state: EngineState,
     ticks: Iterable,  # yields (S, n_in) feature arrays, one per tick
@@ -339,6 +800,7 @@ def run(
     teacher: Teacher,
     mode: str = "algo1",
     capacity: int = 64,
+    backpressure: str = "drop_oldest",
     collect: bool = True,
     drain: bool = True,
     donate: Optional[bool] = None,
@@ -350,9 +812,11 @@ def run(
     while it runs (double buffering), then submit the queried features to
     ``teacher.ask`` and apply any answers ``teacher.poll`` returns through
     ``learn`` — out of order, against the features captured at query time.
-    Pending tickets live in a ``capacity``-slot ring; overflow drops the
-    oldest.  After the iterator is exhausted, answers still in flight are
-    drained (``drain=True``) so no late label is silently discarded.
+    Pending tickets live in a ``capacity``-slot ring; saturation behavior
+    is the pluggable ``backpressure`` policy (``BACKPRESSURE_POLICIES``;
+    default drop-oldest).  After the iterator is exhausted, answers still
+    in flight are drained (``drain=True``) so no late label is silently
+    discarded.
 
     Returns ``(final state, outputs, stats)``.  ``outputs`` mirrors
     ``run_fleet``'s stacked (T, S) ``FleetStepOutput`` (host arrays;
@@ -366,158 +830,17 @@ def run(
     ownership of ``state`` with a one-time copy, so the caller's pytree
     stays valid either way.
     """
-    if donate is None:
-        donate = True
-    # Off-CPU, ship the next tick to the device eagerly so the transfer
-    # overlaps the in-flight dispatch; on CPU the eager path is pure Python
-    # overhead (~0.5 ms/call) and pjit's native conversion is far cheaper.
-    ship = (lambda a: a) if jax.default_backend() == "cpu" else jax.device_put
-    if donate:
-        # Own the buffers we are about to donate tick after tick; the
-        # caller's state must survive the run.
-        state = jax.tree.map(jnp.copy, state)
-    plan_fn = _plan_runner(cfg, mode, donate)
-    learn_fn = _learn_runner(cfg, donate)
-    fused_fn = _learn_plan_runner(cfg, mode, donate)
-    ring = PendingRing(capacity)
-    if stats is None:
-        stats = StreamStats()
-    cols: dict[str, list] = {
-        k: [] for k in ("pred", "outputs", "queried", "theta", "confidence", "mode_training")
-    }
-    trained_rows: list[np.ndarray] = []
-
-    full_mask_dev: list = [None]  # cached device-side all-True apply mask
-
-    def _claim(reply: TeacherReply, now: int):
-        """Resolve a reply against the ring; returns (plan, learn args) or
-        None, with all drop/orphan accounting applied."""
-        ent = ring.pop(reply.ticket)
-        if ent is None:
-            stats.replies_orphaned += 1
-            return None
-        mask = ent.queried & np.asarray(reply.answered, bool)
-        n = int(mask.sum())
-        if n == 0:
-            # The teacher answered the ticket but covered none of its asked
-            # streams — those queries are gone for good; meter the ticket as
-            # lost so queries_issued stays reconcilable against
-            # applied + dropped + lost.
-            stats.tickets_lost += 1
-            return None
-        stats.labels_applied += n
-        stats.label_latency_ticks.append(now - ent.tick)
-        if collect and ent.tick < len(trained_rows):
-            trained_rows[ent.tick] |= mask
-        if n == mask.shape[0]:
-            # Steady state (everyone queried, everyone answered): reuse one
-            # device-resident mask instead of a fresh upload per tick.
-            if full_mask_dev[0] is None or full_mask_dev[0].shape != mask.shape:
-                full_mask_dev[0] = jnp.ones(mask.shape, jnp.bool_)
-            mask_dev = full_mask_dev[0]
-        else:
-            mask_dev = jnp.asarray(mask)
-        p = ent.plan
-        return (
-            p.h,
-            ship(np.asarray(reply.labels, np.int32)),
-            p.pred,
-            p.confidence,
-            mask_dev,
-            p.controller_on,
-            p.theta,
-        )
-
-    def _learn(state, args):
-        new_elm, new_prune = learn_fn(
-            state.elm, state.prune, state.drift, state.meter, *args
-        )
-        return state._replace(elm=new_elm, prune=new_prune)
-
+    sess = StreamSession(
+        state, cfg, teacher, mode=mode, capacity=capacity,
+        backpressure=backpressure, collect=collect, donate=donate, stats=stats,
+    )
     it = iter(ticks)
     nxt = next(it, None)
-    t = 0
-    t_start = time.perf_counter()
-    p = None
     if nxt is not None:
-        # First tick: nothing pending yet, plain plan dispatch.
-        nxt = ship(nxt)
-        (new_prune, new_drift, new_meter), p = plan_fn(
-            state.elm, state.prune, state.drift, state.meter, nxt
-        )
-        state = state._replace(prune=new_prune, drift=new_drift, meter=new_meter)
-    while nxt is not None:
-        x = nxt
-        t0 = time.perf_counter()
-        # Double buffering: pull tick t+1 from the iterator and ship it to
-        # the device while the device is busy with tick t's plan.
-        nxt = next(it, None)
-        if nxt is not None:
-            nxt = ship(nxt)
-        queried_host = np.asarray(p.queried)  # host syncs on tick t here
-        if collect:
-            for k in cols:
-                cols[k].append(np.asarray(getattr(p, k)))
-            trained_rows.append(np.zeros(queried_host.shape, bool))
-        n_q = int(queried_host.sum())
-        if n_q:
-            ticket = teacher.ask(x, queried_host, t)
-            stats.tickets_issued += 1
-            stats.queries_issued += n_q
-            dropped = ring.push(ticket, PendingTicket(t, queried_host, p))
-            if dropped is not None:
-                stats.tickets_dropped += 1
-                stats.queries_dropped += int(dropped.queried.sum())
-        applies = [a for a in (_claim(r, t) for r in teacher.poll(t)) if a is not None]
-        if nxt is not None:
-            # Steady state: fuse the last reply's learn with the next tick's
-            # plan into one dispatch (earlier replies, if any, apply first,
-            # so all of tick t's answers land before tick t+1 is planned).
-            if applies:
-                for args in applies[:-1]:
-                    state = _learn(state, args)
-                (elm2, prune2, drift2, meter2), p = fused_fn(
-                    state.elm, state.prune, state.drift, state.meter,
-                    *applies[-1], nxt,
-                )
-                state = EngineState(elm=elm2, prune=prune2, drift=drift2, meter=meter2)
-            else:
-                (new_prune, new_drift, new_meter), p = plan_fn(
-                    state.elm, state.prune, state.drift, state.meter, nxt
-                )
-                state = state._replace(
-                    prune=new_prune, drift=new_drift, meter=new_meter
-                )
-        else:
-            for args in applies:
-                state = _learn(state, args)
-        stats.ticks += 1
-        stats.stream_steps += int(x.shape[0])
-        stats.tick_ms.append((time.perf_counter() - t0) * 1e3)
-        t += 1
-
-    if drain:
-        drained = 0
-        while len(ring) and teacher.in_flight() > 0 and drained < MAX_DRAIN_TICKS:
-            for reply in teacher.poll(t):
-                args = _claim(reply, t)
-                if args is not None:
-                    state = _learn(state, args)
-            t += 1
-            drained += 1
-    lost = ring.drain()
-    stats.tickets_lost += len(lost)
-    stats.wall_s += time.perf_counter() - t_start
-
-    outs = None
-    if collect and cols["pred"]:
-        outs = FleetStepOutput(
-            pred=np.stack(cols["pred"]),
-            outputs=np.stack(cols["outputs"]),
-            queried=np.stack(cols["queried"]),
-            trained=np.stack(trained_rows),
-            theta=np.stack(cols["theta"]),
-            confidence=np.stack(cols["confidence"]),
-            mode_training=np.stack(cols["mode_training"]),
-        )
-    return state, outs, stats
+        sess.start(nxt)
+        while nxt is not None:
+            # Double buffering: pull tick t+1 from the iterator (and ship it
+            # inside advance) while the device is busy with tick t's plan.
+            nxt = next(it, None)
+            sess.advance(nxt)
+    return sess.finish(drain=drain)

@@ -1,36 +1,61 @@
-"""Serving driver: prefill -> decode loop with the ODL cascade.
+"""Serving driver: prefill -> decode loop with multi-tenant ODL cascades.
 
-Each decode step emits (next-token logits, per-stream ODL prediction,
-query_mask).  Streams whose P1P2 confidence clears auto-theta SKIP the
-teacher — the paper's data pruning as a serving-compute/communication saver.
-Teacher answers arrive asynchronously through the engine's Teacher protocol
-(``repro.engine.stream``) with injectable latency/jitter; in-flight queries
-wait in a fixed-capacity ``PendingRing`` and are applied out of order with
-``serve_apply_labels`` (masked rank-1 RLS per stream).
+The backbone decodes once per tick; the per-tick stream features fan out to
+``--tenants`` independent ODL fleets multiplexed over this process by
+``repro.engine.multiplex`` — each tenant has its own engine state, pending
+ring, teacher connection, and backpressure policy (``--backpressure``:
+drop_oldest / drop_newest / block / coalesce), while all tenants share one
+compiled plan/learn executable through the engine's bounded runner LRUs.
+Streams whose P1P2 confidence clears auto-theta SKIP the teacher — the
+paper's data pruning as a serving-compute/communication saver.  Tenants
+run the engine's ``serve`` mode: the per-stream drift detector runs live
+and a drifting stream is forced to query (pruning condition 2), exactly
+the ``gate`` decision logic the single-tenant ``model.serve_step`` path
+uses.  Teacher answers arrive asynchronously (out of order, possibly
+partial) and are applied against the *plan-time* decision context, so a
+delayed reply is judged by the prediction/threshold the query was issued
+under.
+
+``--teacher rpc`` swaps the in-process latency model for a real loopback
+TCP label server (``repro.engine.rpc``), with wall-clock timeout → loss.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tokens 32 \
-      --teacher-latency 2 --teacher-jitter 1
+      --tenants 2 --backpressure coalesce --teacher-latency 2
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import contextlib
+import itertools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.engine import stream
+from repro import configs, engine
+from repro.engine import multiplex, rpc, stream
 from repro.models import model as model_lib
+
+
+def _decode_feats(params, state, prompts, cfg, gen_tokens):
+    """Tick source: one backbone decode step per tick, yielding (B, d)
+    stream features (greedy next-token feedback, ODL state untouched)."""
+    step = jax.jit(lambda p, st, t: model_lib.decode_step(p, st, t, cfg))
+    tok = prompts[:, -1:]
+    for _ in range(gen_tokens):
+        logits, feats, state = step(params, state, tok)
+        tok = jnp.argmax(logits, -1)[:, None]
+        yield feats
 
 
 def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 16,
           gen_tokens: int = 32, max_len: int = 128, seed: int = 0,
           teacher_latency: int = 1, teacher_jitter: int = 0,
-          pending_capacity: int = 8):
+          teacher_loss: float = 0.0, pending_capacity: int = 8,
+          tenants: int = 1, backpressure: str = "drop_oldest",
+          teacher: str = "latency", rpc_timeout_s: float = 5.0):
     cfg = configs.get_config(arch, variant)
     key = jax.random.PRNGKey(seed)
     params = model_lib.layers.init_params(model_lib.build_schema(cfg), key)
@@ -40,86 +65,91 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
         lambda p, t: model_lib.prefill(p, t, cfg, max_len=max_len)
     )(params, prompts)
 
-    step = jax.jit(lambda p, st, t: model_lib.serve_step(p, st, t, cfg))
-    apply_labels = jax.jit(
-        lambda st, f, l, m: model_lib.serve_apply_labels(st, f, l, m, cfg)
+    odl_cfg = model_lib.core_config(cfg)
+    # One backbone decode feeds every tenant: tee the tick source N ways
+    # (the round-robin scheduler keeps tenants within one time slice of
+    # each other, so the tee buffer stays bounded by the quantum).
+    feeds = itertools.tee(
+        _decode_feats(params, state, prompts, cfg, gen_tokens), tenants
     )
 
-    # The smoke teacher predicts random classes (a real deployment points
-    # label_fn at the pod-side backbone ensemble); latency/jitter model the
-    # BLE/network round-trip in decode ticks.
-    rng = np.random.default_rng(seed)
-    teacher = stream.LatencyTeacher(
-        label_fn=lambda tick, feats: rng.integers(0, cfg.odl.n_out, size=batch),
-        latency=teacher_latency, jitter=teacher_jitter, seed=seed,
-    )
-    ring = stream.PendingRing(pending_capacity)
-    stats = stream.StreamStats()
-
-    def drain_replies(state, now):
-        for reply in teacher.poll(now):
-            ent = ring.pop(reply.ticket)
-            if ent is None:
-                stats.replies_orphaned += 1
-                continue
-            asked_tick, feats, qmask = ent
-            mask = qmask & np.asarray(reply.answered, bool)
-            n = int(mask.sum())
-            if n == 0:
-                # Reply covered none of the asked streams: those queries
-                # are gone for good — meter the ticket as lost.
-                stats.tickets_lost += 1
-                continue
-            state = apply_labels(
-                state, feats, jnp.asarray(reply.labels, jnp.int32), jnp.asarray(mask)
+    with contextlib.ExitStack() as stack:
+        if teacher == "rpc":
+            host, port = stack.enter_context(
+                rpc.loopback_server(n_out=cfg.odl.n_out)
             )
-            stats.labels_applied += n
-            stats.label_latency_ticks.append(now - asked_tick)
-        return state
+            teachers = [
+                stack.enter_context(
+                    rpc.RpcTeacher(host, port, timeout_s=rpc_timeout_s)
+                )
+                for _ in range(tenants)
+            ]
+        else:
+            # The smoke teacher predicts random classes (a real deployment
+            # points label_fn at the pod-side backbone ensemble);
+            # latency/jitter/loss model the BLE/network round-trip in
+            # decode ticks, per tenant.
+            def make_label_fn(i):
+                rng = np.random.default_rng(seed + i)
+                return lambda tick, feats: rng.integers(0, cfg.odl.n_out, size=batch)
 
-    tok = prompts[:, -1:]
-    skips = 0
-    for i in range(gen_tokens):
-        t0 = time.perf_counter()
-        logits, state, odl = step(params, state, tok)
-        tok = jnp.argmax(logits, -1)[:, None]
-        q = np.asarray(odl["query_mask"])
-        n_q = int(q.sum())
-        skips += int((~q).sum())
-        if n_q:
-            ticket = teacher.ask(odl["feats"], q, i)
-            stats.tickets_issued += 1
-            stats.queries_issued += n_q
-            dropped = ring.push(ticket, (i, odl["feats"], q))
-            if dropped is not None:
-                stats.tickets_dropped += 1
-                stats.queries_dropped += int(dropped[2].sum())
-        state = drain_replies(state, i)
-        jax.block_until_ready(tok)
-        stats.ticks += 1
-        stats.stream_steps += batch
-        stats.tick_ms.append((time.perf_counter() - t0) * 1e3)
-    # The decode loop exits with the final ticks' queries still in flight;
-    # wait out the teacher so no answered labels are silently dropped.
-    t = gen_tokens
-    drained = 0
-    while len(ring) and teacher.in_flight() > 0 and drained < stream.MAX_DRAIN_TICKS:
-        state = drain_replies(state, t)
-        t += 1
-        drained += 1
-    stats.tickets_lost += len(ring.drain())
+            teachers = [
+                stream.LatencyTeacher(
+                    label_fn=make_label_fn(i), latency=teacher_latency,
+                    jitter=teacher_jitter, loss_prob=teacher_loss, seed=seed + i,
+                )
+                for i in range(tenants)
+            ]
 
-    queries = stats.queries_issued
-    total = queries + skips
-    meter_bytes = float(np.asarray(state.odl.meter.total).sum())
-    print(f"decoded {gen_tokens} tokens x {batch} streams; "
-          f"teacher queries {queries}/{total} ({100*queries/max(total, 1):.1f}% comm volume), "
-          f"labels applied {stats.labels_applied}/{queries}, "
-          f"{stats.tickets_dropped} tickets dropped, {meter_bytes/1e3:.1f} kB metered")
-    print(f"tick latency p50/p95: {stats.tick_p50_ms:.2f}/{stats.tick_p95_ms:.2f} ms; "
-          f"label latency p50/p95: {stats.label_latency_p50:.0f}/"
-          f"{stats.label_latency_p95:.0f} ticks "
-          f"(teacher latency {teacher_latency}+U[0,{teacher_jitter}])")
+        tenant_list = [
+            multiplex.Tenant(
+                name=f"tenant{i}",
+                state=engine.init_fleet(odl_cfg, batch),
+                ticks=feeds[i],
+                cfg=odl_cfg,
+                teacher=teachers[i],
+                mode="serve",  # gate semantics: live drift detector,
+                # condition-2 forced queries, controller always armed
+                capacity=pending_capacity,
+                backpressure=backpressure,
+                collect=False,  # long-running servers keep no history
+            )
+            for i in range(tenants)
+        ]
+        results, agg = multiplex.run(tenant_list)
+
+    queries = skips = 0
+    for name in sorted(results):
+        r = results[name]
+        s = r.stats
+        t_skips = s.stream_steps - s.queries_issued
+        queries += s.queries_issued
+        skips += t_skips
+        meter_kb = float(np.asarray(r.state.meter.total).sum()) / 1e3
+        recon = "ok" if s.reconciled else "BROKEN"
+        print(f"{name}: queries {s.queries_issued}/{s.stream_steps} "
+              f"({100 * s.queries_issued / max(s.stream_steps, 1):.1f}% comm volume), "
+              f"labels {s.labels_applied}, dropped {s.queries_dropped}, "
+              f"lost {s.queries_lost}, coalesced {s.queries_coalesced}, "
+              f"orphaned {s.replies_orphaned}, accounting {recon}, "
+              f"{meter_kb:.1f} kB metered")
+        rpc_note = (
+            f"; rpc timeouts {teachers[int(name.removeprefix('tenant'))].timed_out}"
+            if teacher == "rpc" else ""
+        )
+        print(f"  tick p50/p95 {s.tick_p50_ms:.2f}/{s.tick_p95_ms:.2f} ms; "
+              f"label latency p50/p95 {s.label_latency_p50:.0f}/"
+              f"{s.label_latency_p95:.0f} ticks{rpc_note}")
+        if not s.reconciled:
+            raise AssertionError(f"{name}: query accounting does not reconcile: "
+                                 f"{s.summary()}")
+    caches = stream.cache_stats()["plan_runner"]
+    print(f"aggregate: {tenants} tenant(s) x {gen_tokens} tokens x {batch} streams "
+          f"= {agg.stream_steps} steps in {agg.wall_s:.2f}s "
+          f"({agg.steps_per_s:,.0f} steps/s); backpressure={backpressure}, "
+          f"teacher={teacher}; plan-runner cache "
+          f"{caches['hits']} hits / {caches['misses']} misses "
+          f"(tenants share executables)")
     return queries, skips
 
 
@@ -129,16 +159,30 @@ def main(argv=None):
     ap.add_argument("--variant", default="smoke")
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="independent ODL fleets multiplexed over this process")
+    ap.add_argument("--backpressure", default="drop_oldest",
+                    choices=stream.BACKPRESSURE_POLICIES,
+                    help="pending-ring saturation policy (per tenant)")
+    ap.add_argument("--teacher", default="latency", choices=("latency", "rpc"),
+                    help="latency: in-process tick-granular model; "
+                    "rpc: loopback TCP label server with timeout->loss")
     ap.add_argument("--teacher-latency", type=int, default=1,
                     help="teacher answer latency in decode ticks")
     ap.add_argument("--teacher-jitter", type=int, default=0,
                     help="extra uniform per-ticket latency in [0, J] ticks")
+    ap.add_argument("--teacher-loss", type=float, default=0.0,
+                    help="fraction of tickets silently lost by the teacher")
+    ap.add_argument("--rpc-timeout", type=float, default=5.0,
+                    help="rpc teacher reply deadline in wall seconds")
     ap.add_argument("--pending-capacity", type=int, default=8,
-                    help="in-flight query ring capacity (oldest dropped)")
+                    help="in-flight query ring capacity (see --backpressure)")
     args = ap.parse_args(argv)
     serve(args.arch, args.variant, batch=args.batch, gen_tokens=args.tokens,
           teacher_latency=args.teacher_latency, teacher_jitter=args.teacher_jitter,
-          pending_capacity=args.pending_capacity)
+          teacher_loss=args.teacher_loss, pending_capacity=args.pending_capacity,
+          tenants=args.tenants, backpressure=args.backpressure,
+          teacher=args.teacher, rpc_timeout_s=args.rpc_timeout)
 
 
 if __name__ == "__main__":

@@ -10,10 +10,13 @@ framework (DESIGN.md §3): every backbone carries an ODL head —
     and zero label traffic — the paper's comm saving, fused into the step.
 
   serve_step: one decode token, plus the head's prediction and the
-    P1P2/auto-theta gate per stream.  The gate's output (query_mask) is the
+    P1P2/auto-theta gate per stream.  The gate's output (a ``GateOutput``
+    with the ``queried`` mask and the plan-time decision context) is the
     cascade signal: which streams must consult the teacher.  Label
     application is asynchronous (BLE round-trip in the paper; a separate
-    `serve_apply_labels` call here).
+    `serve_apply_labels` call here, fed the same GateOutput so delayed
+    answers are judged at query-time context).  ``decode_step`` is the
+    gate-free variant for the multiplexed serving path.
 
 All functions are pure and pjit-friendly; `input_specs` yields weak-typed
 ShapeDtypeStructs for the multi-pod dry-run.
@@ -220,14 +223,16 @@ def serve_step(
     state: ServeState,
     token: jnp.ndarray,  # (B, 1) int32
     cfg: ModelConfig,
-) -> tuple[jnp.ndarray, ServeState, dict]:
+) -> tuple[jnp.ndarray, ServeState, engine.GateOutput]:
     """One decode token + the fleet engine's predict/gate on stream features.
 
-    Returns (logits (B, V), state', odl_out) where odl_out carries the
-    per-stream prediction, confidence, and query_mask (True -> this stream
-    must consult the teacher; labels applied later via serve_apply_labels).
-    The engine also runs the per-stream drift detector (a drifting stream is
-    forced to query — pruning condition 2) and meters query traffic.
+    Returns (logits (B, V), state', odl_out) where odl_out is the engine's
+    ``GateOutput``: the per-stream prediction, confidence, ``queried`` mask
+    (True -> this stream must consult the teacher), and the plan-time
+    decision context (h/pred/confidence/theta) that ``serve_apply_labels``
+    judges the — possibly delayed — teacher answer against.  The engine
+    also runs the per-stream drift detector (a drifting stream is forced to
+    query — pruning condition 2) and meters query traffic.
     """
     hidden, new_caches = transformer.lm_decode_hidden(
         params, token, state.caches, state.pos, cfg
@@ -240,15 +245,43 @@ def serve_step(
     return logits, new_state, odl_out
 
 
+def decode_step(
+    params: dict,
+    state: ServeState,
+    token: jnp.ndarray,  # (B, 1) int32
+    cfg: ModelConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray, ServeState]:
+    """One decode token, *without* the ODL gate: (logits, feats, state').
+
+    The multiplexed serving path (``launch/serve.py`` + ``engine.multiplex``)
+    runs the backbone once and fans the per-tick features out to N tenant
+    fleets, each with its own engine state — so the gate/learn halves live
+    in the tenants' ``StreamSession``s, not here.  ``state.odl`` passes
+    through untouched.
+    """
+    hidden, new_caches = transformer.lm_decode_hidden(
+        params, token, state.caches, state.pos, cfg
+    )
+    logits = transformer.lm_logits(params, hidden, cfg)[:, 0]
+    feats = hidden[:, 0].astype(jnp.float32)  # (B, d)
+    return logits, feats, state._replace(caches=new_caches, pos=state.pos + 1)
+
+
 def serve_apply_labels(
     state: ServeState,
-    feats: jnp.ndarray,  # (B, d) features captured at query time
+    ctx: engine.GateOutput,  # gate output captured at query time
     labels: jnp.ndarray,  # (B,) teacher labels (valid where mask)
     mask: jnp.ndarray,  # (B,) bool — streams whose teacher answered
     cfg: ModelConfig,
 ) -> ServeState:
-    """Asynchronous label acquisition: RLS-train the per-stream heads."""
-    new_odl = engine.apply_labels(state.odl, feats, labels, mask, core_config(cfg))
+    """Asynchronous label acquisition: RLS-train the per-stream heads.
+
+    ``ctx`` is the ``GateOutput`` returned by the ``serve_step`` that issued
+    the query, so a delayed reply trains on the query-time activations and
+    is judged against the query-time prediction/threshold (never against
+    weights that changed while the answer was in flight).
+    """
+    new_odl = engine.apply_labels(state.odl, ctx, labels, mask, core_config(cfg))
     return state._replace(odl=new_odl)
 
 

@@ -80,7 +80,7 @@ def test_prefill_then_decode_smoke(arch):
     )(params, serve_state, nxt)
     assert logits.shape == (B, cfg.vocab_size)
     assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
-    assert odl_out["query_mask"].shape == (B,)
+    assert odl_out.queried.shape == (B,)
     assert int(serve_state2.pos[0]) == S + 1
 
 

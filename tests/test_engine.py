@@ -168,13 +168,13 @@ def test_gate_and_apply_labels_roundtrip():
 
     st0 = engine.init_fleet(cfg, s_len)
     st1, out = engine.gate(st0, x, cfg)
-    assert bool(out["query_mask"].all())
+    assert bool(out.queried.all())
     np.testing.assert_allclose(
         np.asarray(st1.meter.up_bytes), np.full(s_len, cfg.elm.n_in * 4.0)
     )
 
     mask = jnp.asarray([True, True, False, False])
-    st2 = engine.apply_labels(st1, x, labels, mask, cfg)
+    st2 = engine.apply_labels(st1, out, labels, mask, cfg)
     np.testing.assert_array_equal(np.asarray(st2.elm.count), [1, 1, 0, 0])
     np.testing.assert_allclose(
         np.asarray(st2.elm.beta[2:]), np.asarray(st1.elm.beta[2:]), atol=1e-6
