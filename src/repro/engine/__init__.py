@@ -101,9 +101,42 @@ Serving entry points (``gate`` / ``apply_labels``) remain for callers that
 carry their own features (``models/model.py``'s decode loop feeds backbone
 hidden states): ``gate`` returns a ``GateOutput`` capturing the plan-time
 decision context (h/pred/confidence/theta), and ``apply_labels`` judges
-the — possibly delayed — teacher answer against exactly that context, the
-same contract as ``plan``/``learn``.  ``launch/serve.py`` multiplexes N
-tenant fleets over the decode loop with these same pieces.
+the — possibly delayed — teacher answer against exactly that context
+(raw query-time features are rejected: recomputing the judgment from
+current weights is stale-reply semantics), the same contract as
+``plan``/``learn``.  ``launch/serve.py`` multiplexes N tenant fleets over
+the decode loop with these same pieces.
+
+Scheduling is round-robin by default; ``multiplex`` also offers deficit
+round robin (``sched="drr"``) that charges each tick its stream count, so
+an S=512 tenant cannot starve an S=16 one — per-tenant results are
+bit-for-bit identical under either scheduler.
+
+Durable sessions
+----------------
+On-device learned state is paid for in teacher-communication energy, so a
+crash must not discard it.  ``engine/snapshot.py`` serializes a live
+``StreamSession`` with full fidelity — ``EngineState``, the pending ring
+with each ticket's plan-time context and raw features, backpressure-policy
+state (deferred ``block`` asks; ``coalesce``'s merge map is the ring
+masks), ``StreamStats``, the in-flight tick, the tick-source cursor, and
+(when supported, e.g. ``LatencyTeacher``) the teacher's own state —
+published atomically with keep-k GC through
+``runtime.checkpoint.CheckpointManager``.  ``StreamSession.snapshot()`` /
+``StreamSession.restore()`` are the session-level API; a restored run is
+bit-for-bit the uninterrupted one under a deterministic snapshot-capable
+teacher (``tests/test_snapshot.py``, every backpressure policy).  Teachers
+that cannot be snapshot (``rpc.RpcTeacher`` — sockets) have their
+in-flight tickets re-asked through the fresh connection and metered
+(``tickets_reasked``), preserving the query-accounting identity.
+``engine/durable.py`` drives a single durable session (and is the
+kill-and-resume CI smoke: ``python -m repro.engine.durable
+--crash-smoke``); ``multiplex.Multiplexer`` adds per-tenant cadence
+snapshots + ``resume``, ``run_supervised`` wraps attempts in
+``runtime.fault.run_with_restarts``, and ``extract``/``admit`` implement
+live tenant migration (quiesce → snapshot → restore into another
+multiplexer).  ``launch/serve.py`` exposes all of it
+(``--snapshot-dir``/``--snapshot-every``/``--resume``/``--migrate``).
 """
 
 from repro.engine.fleet import (  # noqa: F401
@@ -128,4 +161,6 @@ from repro.engine.fleet import (  # noqa: F401
 
 # fleet must import first: its repro.core imports resolve the
 # core -> odl_head(alias) -> engine.scalar cycle before scalar/stream load.
-from repro.engine import multiplex, scalar, stream  # noqa: E402,F401
+# (engine.durable and engine.rpc are importable leaves with CLIs — kept out
+# of the package import so ``python -m repro.engine.durable`` stays clean.)
+from repro.engine import multiplex, scalar, snapshot, stream  # noqa: E402,F401

@@ -20,7 +20,6 @@ Design rules:
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import NamedTuple, Optional, Union
 
 import jax
@@ -441,7 +440,7 @@ def gate(
 
 def apply_labels(
     state: EngineState,
-    ctx: Union[GateOutput, PlanOutput, jnp.ndarray],
+    ctx: Union[GateOutput, PlanOutput],
     labels: jnp.ndarray,  # (S,) int32 teacher answers (valid where mask)
     mask: jnp.ndarray,  # (S,) bool — streams whose teacher answered
     cfg: EngineConfig,
@@ -452,32 +451,25 @@ def apply_labels(
     query was issued: the RLS update trains on the plan-time ``h`` and the
     ladder judges agreement against the plan-time ``pred``/``confidence``
     under the plan-time ``theta`` — exactly like ``learn``.  Recomputing
-    those from the *current* state (the pre-ISSUE-3 behavior) is wrong with
-    a laggy teacher: weights updated while the answer was in flight change
-    the prediction, so the agree/confidence judgment no longer describes
-    the decision the query belongs to.
+    those from the *current* state (the pre-ISSUE-3 behavior, removed in
+    ISSUE 4) is wrong with a laggy teacher: weights updated while the
+    answer was in flight change the prediction, so the agree/confidence
+    judgment no longer describes the decision the query belongs to.
 
     Only the answered streams (``mask``) transition the ladder — the skip
     accounting for everyone else already happened in ``gate`` — so calling
     this once per arrived reply (zero, one, or many per tick, depending on
     teacher latency) keeps per-tick controller semantics.
-
-    Passing the raw query-time features as ``ctx`` (the deprecated
-    recompute path) still works but emits a ``DeprecationWarning``.
     """
-    if isinstance(ctx, (GateOutput, PlanOutput)):
-        h, pred, conf, theta = ctx.h, ctx.pred, ctx.confidence, ctx.theta
-    else:
-        warnings.warn(
-            "apply_labels(state, x, ...) with raw features recomputes "
-            "pred/confidence/theta from the *current* weights — stale-reply "
-            "semantics; pass the GateOutput from gate() instead.",
-            DeprecationWarning,
-            stacklevel=2,
+    if not isinstance(ctx, (GateOutput, PlanOutput)):
+        raise TypeError(
+            "apply_labels needs the plan-time decision context: pass the "
+            "GateOutput returned by gate() (or a PlanOutput from plan()). "
+            "The raw-features recompute path was removed — it judged "
+            "delayed replies against the *current* weights (stale-reply "
+            f"semantics). Got {type(ctx).__name__}."
         )
-        h, pred, o = _predict(state, ctx, cfg)
-        conf = pruning.confidence(o)
-        theta = None
+    h, pred, conf, theta = ctx.h, ctx.pred, ctx.confidence, ctx.theta
     agree = pred == labels
     y = labels_mod.one_hot(labels, cfg.elm.n_out)
     new_elm = oselm.fleet_rank1_update_h(

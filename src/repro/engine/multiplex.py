@@ -10,16 +10,43 @@ Tenants with the same ``(cfg, mode, donate)`` therefore share one compiled
 executable: adding a tenant with a config already being served costs no
 compile and no extra executable memory.
 
-Scheduling is round-robin with a ``quantum``-tick time slice (default 8):
-each tenant's ``StreamSession`` (``engine/stream.py``) advances by up to
-``quantum`` plan/ask/poll/learn cycles before the scheduler moves on —
-switching every tick would evict the tenant's state from cache on every
-switch.  Because a session's per-tenant op sequence does not depend on
-what the scheduler interleaves around it, a multiplexed tenant reproduces
-its solo ``stream.run`` bit-for-bit at any quantum (locked by
-``tests/test_multiplex.py``).
-Tenants whose tick source is exhausted are finished (drained) immediately;
-the multiplexer ends when every tenant has finished.
+Scheduling (``sched``):
+
+* ``"rr"`` (default) — round-robin with a ``quantum``-tick time slice:
+  each tenant's ``StreamSession`` advances by up to ``quantum``
+  plan/ask/poll/learn cycles before the scheduler moves on (switching
+  every tick would evict the tenant's state from cache on every switch).
+* ``"drr"`` — deficit round robin in *stream-step* (cost) units: every
+  round each live tenant's deficit grows by the same credit
+  (``quantum × min S``) and one tick debits that tenant's own S, so a
+  tenant's share of device time is equal regardless of its size — an
+  S=512 tenant runs ~1 tick for every 32 ticks of an S=16 tenant instead
+  of head-of-line blocking it for ``quantum`` huge ticks.  Unspent credit
+  carries over, so big tenants lose no throughput, only burstiness.
+
+Because a session's per-tenant op sequence does not depend on what the
+scheduler interleaves around it, a multiplexed tenant reproduces its solo
+``stream.run`` bit-for-bit under either scheduler at any quantum (locked
+by ``tests/test_multiplex.py``).  Tenants whose tick source is exhausted
+are drained in bounded slices and finished; the multiplexer ends when
+every tenant has finished.
+
+Durability (``engine/snapshot.py``): pass ``snapshot_dir`` +
+``snapshot_every`` and each tenant's session is serialized every
+``snapshot_every`` ticks to ``<snapshot_dir>/<tenant>/step_*`` through
+``runtime.checkpoint.CheckpointManager`` (atomic publish, keep-k, crashed
+``.tmp`` fallback).  ``resume=True`` restores each tenant from its latest
+published snapshot and seeks its (seekable) tick source to the recorded
+cursor.  ``run_supervised`` wraps the whole thing in
+``runtime.fault.run_with_restarts``: crash → restore → continue, bounded.
+
+Live migration: ``Multiplexer.extract(name)`` quiesces a tenant (bounded
+drain of in-flight replies), snapshots it, and removes it from this
+scheduler; ``admit(tenant, snapshot=...)`` (or the ``snapshots=``
+constructor arg) restores it into *another* multiplexer — in-flight
+tickets that did not drain are re-asked through the new teacher connection
+and metered (``tickets_reasked``), so the query-accounting identity
+reconciles across the move.
 
 Usage::
 
@@ -27,22 +54,31 @@ Usage::
         multiplex.Tenant("edge-a", state_a, ticks_a, cfg_a, teacher_a),
         multiplex.Tenant("edge-b", state_b, ticks_b, cfg_b, teacher_b,
                          backpressure="coalesce"),
-    ])
-    results["edge-a"].state, results["edge-a"].stats.tick_p95_ms, ...
+    ], sched="drr", snapshot_dir="/var/ckpt", snapshot_every=1000)
 
-``launch/serve.py`` drives this with ``--tenants`` / ``--backpressure``;
-``benchmarks/multiplex_bench.py`` measures per-tenant tick p50/p95 and
-aggregate steps/s against N sequential ``stream.run`` calls.
+``launch/serve.py`` drives this with ``--tenants`` / ``--backpressure`` /
+``--sched`` / ``--snapshot-dir`` / ``--resume`` / ``--migrate``;
+``benchmarks/multiplex_bench.py`` measures aggregate throughput and
+``benchmarks/snapshot_bench.py`` the snapshot overhead.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import os
 import time
 from typing import Iterable, NamedTuple, Optional
 
+import numpy as np
+
+from repro.engine import snapshot as snapshot_mod
 from repro.engine import stream
 from repro.engine.types import EngineConfig, EngineState, FleetStepOutput
+from repro.runtime import fault
+from repro.runtime.checkpoint import CheckpointManager
+
+SCHEDULERS = ("rr", "drr")
 
 
 @dataclasses.dataclass
@@ -52,13 +88,14 @@ class Tenant:
     ``name`` keys the result dict (must be unique).  Everything else is
     exactly what ``stream.run`` takes — per tenant: its own config, state,
     tick source, teacher, ring capacity, and backpressure policy
-    (``stream.BACKPRESSURE_POLICIES``).
+    (``stream.BACKPRESSURE_POLICIES``).  ``state`` may be None when the
+    tenant is admitted from a snapshot (the snapshot carries the state).
     """
 
     name: str
-    state: EngineState
+    state: Optional[EngineState]
     ticks: Iterable  # yields (S, n_in) feature arrays, one per tick
-    cfg: EngineConfig
+    cfg: Optional[EngineConfig]
     teacher: stream.Teacher
     mode: str = "algo1"
     capacity: int = 64
@@ -88,6 +125,7 @@ class MultiplexStats:
     rounds: int = 0
     stream_steps: int = 0
     ticks: int = 0
+    snapshots: int = 0
     wall_s: float = 0.0
 
     @property
@@ -100,6 +138,7 @@ class MultiplexStats:
             "rounds": self.rounds,
             "ticks": self.ticks,
             "stream_steps": self.stream_steps,
+            "snapshots": self.snapshots,
             "steps_per_s": self.steps_per_s,
             "wall_s": self.wall_s,
             "caches": stream.cache_stats(),
@@ -116,30 +155,81 @@ class _Slot:
     DRAIN_TICKS_PER_SLICE = 64
     DRAIN_IDLE_SLEEP_S = 50e-6
 
-    def __init__(self, tenant: Tenant):
+    def __init__(
+        self,
+        tenant: Tenant,
+        manager: Optional[CheckpointManager] = None,
+        snapshot_every: int = 0,
+        resume: bool = False,
+        snapshot_tree: Optional[dict] = None,
+        pending: str = "auto",
+        positioned: bool = False,
+    ):
         self.tenant = tenant
-        self.it = iter(tenant.ticks)
-        self.session = stream.StreamSession(
-            tenant.state,
-            tenant.cfg,
-            tenant.teacher,
-            mode=tenant.mode,
-            capacity=tenant.capacity,
-            backpressure=tenant.backpressure,
-            collect=tenant.collect,
-            donate=tenant.donate,
-        )
+        self.manager = manager
+        self.snapshot_every = snapshot_every
+        from_manager = False
+        if snapshot_tree is None and resume and manager is not None:
+            if manager.latest_step() is not None:
+                _, snapshot_tree = manager.restore()
+                from_manager = True
+        if snapshot_tree is not None:
+            self.session = stream.StreamSession.restore(
+                snapshot_tree, tenant.teacher, cfg=tenant.cfg, pending=pending
+            )
+            consumed = snapshot_mod.ticks_consumed(snapshot_tree)
+            if from_manager or getattr(tenant.ticks, "seek", None) is not None:
+                # Crash-restart: the fresh source is definitely at tick 0 —
+                # it MUST be seekable (seek_ticks raises otherwise; silently
+                # replaying ticks 0..k-1 into a t=k session would corrupt
+                # training).
+                snapshot_mod.seek_ticks(tenant.ticks, consumed)
+            elif not positioned:
+                # An explicit migration snapshot may hand over the
+                # partially-consumed iterator itself (what ``extract``
+                # returns) — but only with an explicit opt-in: silently
+                # treating a fresh tick-0 iterator as positioned at tick k
+                # would replay ticks into a t=k session.
+                raise ValueError(
+                    f"tenant {tenant.name!r}: restoring a snapshot needs a "
+                    "seekable tick source (snapshot.ResumableTicks), or "
+                    "pass positioned=True when handing over the "
+                    "partially-consumed iterator returned by extract()"
+                )
+        else:
+            if tenant.state is None or tenant.cfg is None:
+                raise ValueError(
+                    f"tenant {tenant.name!r} has no state/cfg and no snapshot "
+                    "to restore from"
+                )
+            self.session = stream.StreamSession(
+                tenant.state,
+                tenant.cfg,
+                tenant.teacher,
+                mode=tenant.mode,
+                capacity=tenant.capacity,
+                backpressure=tenant.backpressure,
+                collect=tenant.collect,
+                donate=tenant.donate,
+            )
+        # Tick cost for the deficit scheduler = this tenant's stream count.
+        self.s = int(np.shape(np.asarray(self.session.state.elm.count))[0])
+        self.deficit = 0.0
+        self.last_ticks = 0  # real ticks advanced in the last step() call
+        self.snapshots_taken = 0
+        self._last_snap_t = self.session.t
         self.draining = False
         self._drain_ticks = 0  # cumulative, capped at stream.MAX_DRAIN_TICKS
         self.result: Optional[TenantResult] = None
 
-    def step(self, drain: bool, quantum: int) -> bool:
-        """Advance this tenant by up to ``quantum`` scheduler events (or
+    def step(self, drain: bool, n_ticks: int) -> bool:
+        """Advance this tenant by up to ``n_ticks`` scheduler events (or
         one bounded drain slice once its ticks are exhausted).  Returns
         True while the tenant still wants scheduling."""
         sess = self.session
+        self.last_ticks = 0
         if not self.draining:
-            for _ in range(quantum):
+            for _ in range(n_ticks):
                 if not sess.started():
                     x0 = next(self.it, None)
                     if x0 is None:  # empty tick source: nothing to run
@@ -147,11 +237,18 @@ class _Slot:
                         break
                     sess.start(x0)
                     continue
+                if sess._p is None:
+                    # Session restored from a snapshot taken after its
+                    # stream ended: nothing left to plan, only the drain.
+                    self.draining = True
+                    break
                 nxt = next(self.it, None)
                 sess.advance(nxt)
+                self.last_ticks += 1
                 if nxt is None:
                     self.draining = True
                     break
+            self.maybe_snapshot()
             if not self.draining:
                 return True
             if not drain:
@@ -170,8 +267,34 @@ class _Slot:
         self._finish()
         return False
 
+    @property
+    def it(self):
+        it = getattr(self, "_it", None)
+        if it is None:
+            it = self._it = iter(self.tenant.ticks)
+        return it
+
+    def maybe_snapshot(self, force: bool = False) -> bool:
+        """Cadence snapshot: capture now, write on the manager's background
+        thread (atomic publish — a crash mid-write falls back to the
+        previous good step)."""
+        if self.manager is None or self.result is not None:
+            return False
+        due = (
+            self.snapshot_every > 0
+            and self.session.t - self._last_snap_t >= self.snapshot_every
+        )
+        if not (due or force) or not self.session.started():
+            return False
+        self.manager.save_async(self.session.t, self.session.snapshot())
+        self._last_snap_t = self.session.t
+        self.snapshots_taken += 1
+        return True
+
     def _finish(self) -> None:
         # Any draining already happened incrementally in step().
+        if self.manager is not None:
+            self.manager.wait()  # never finish with a snapshot mid-write
         state, outs, stats = self.session.finish(drain=False)
         self.result = TenantResult(
             name=self.tenant.name, state=state, outputs=outs, stats=stats
@@ -181,22 +304,216 @@ class _Slot:
 DEFAULT_QUANTUM = 8
 
 
+class Multiplexer:
+    """The scheduler: drives N tenant sessions round-robin (or DRR) with
+    optional per-tenant durability (see module docstring).
+
+    ``round()`` runs one scheduler round and returns True while any tenant
+    is live — drive it manually to interleave control (live migration),
+    or call ``run()`` to completion.
+    """
+
+    def __init__(
+        self,
+        tenants: list[Tenant],
+        drain: bool = True,
+        quantum: int = DEFAULT_QUANTUM,
+        sched: str = "rr",
+        snapshot_dir: Optional[str] = None,
+        snapshot_every: int = 0,
+        resume: bool = False,
+        snapshots: Optional[dict] = None,
+        pending: str = "auto",
+    ):
+        if quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {quantum}")
+        if sched not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {sched!r}; choose {SCHEDULERS}")
+        if resume and snapshot_dir is None:
+            raise ValueError(
+                "resume=True needs snapshot_dir — without it every tenant "
+                "would silently start from scratch"
+            )
+        names = [t.name for t in tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"tenant names must be unique, got {names}")
+        self.drain = drain
+        self.quantum = quantum
+        self.sched = sched
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = snapshot_every
+        self._resume = resume
+        self._pending = pending
+        self.agg = MultiplexStats(n_tenants=len(tenants))
+        self._slots: list[_Slot] = []
+        self._live: list[_Slot] = []
+        self._t0: Optional[float] = None
+        for t in tenants:
+            self.admit(t, snapshot=(snapshots or {}).get(t.name))
+        self.agg.n_tenants = len(self._slots)
+
+    # -- tenant management -------------------------------------------------
+
+    def _manager_for(self, name: str) -> Optional[CheckpointManager]:
+        if self.snapshot_dir is None:
+            return None
+        return CheckpointManager(os.path.join(self.snapshot_dir, name))
+
+    def admit(self, tenant: Tenant, snapshot: Optional[dict] = None,
+              positioned: bool = False) -> None:
+        """Add a tenant — fresh, resumed from its snapshot directory, or
+        restored from an explicit ``snapshot`` tree (live migration).
+        ``positioned=True`` asserts that a non-seekable ``tenant.ticks`` is
+        already at the snapshot's cursor (i.e. it is the iterator
+        ``extract`` returned, not a fresh tick-0 source)."""
+        if any(s.tenant.name == tenant.name for s in self._slots):
+            raise ValueError(f"tenant name {tenant.name!r} already admitted")
+        slot = _Slot(
+            tenant,
+            manager=self._manager_for(tenant.name),
+            snapshot_every=self.snapshot_every,
+            resume=self._resume,
+            snapshot_tree=snapshot,
+            pending=self._pending,
+            positioned=positioned,
+        )
+        self._slots.append(slot)
+        self._live.append(slot)
+        self.agg.n_tenants = len(self._slots)
+
+    def _slot(self, name: str) -> _Slot:
+        for s in self._slots:
+            if s.tenant.name == name:
+                return s
+        raise KeyError(f"no tenant named {name!r}")
+
+    def session(self, name: str) -> stream.StreamSession:
+        return self._slot(name).session
+
+    def finished(self, name: str) -> bool:
+        return self._slot(name).result is not None
+
+    def extract(self, name: str, quiesce_ticks: int = 4096):
+        """Live-migrate a tenant out: quiesce (bounded drain of in-flight
+        replies — still-unanswered tickets stay in the ring and travel in
+        the snapshot), snapshot, and remove it from this scheduler.
+
+        Returns ``(snapshot_tree, ticks)``: the serialized session and the
+        tenant's *partially-consumed* tick iterator (positioned at the next
+        unread tick — for a seekable source this is the source itself and
+        ``admit`` re-seeks it; for a plain sequence/generator it is the
+        live iterator, so migration never replays ticks).  Hand both to
+        another multiplexer's ``admit`` (same process) or persist the tree
+        through a ``CheckpointManager`` and reopen a seekable source at
+        ``snapshot.ticks_consumed(tree)`` (another process).
+        """
+        slot = self._slot(name)
+        if slot.result is not None:
+            raise ValueError(f"tenant {name!r} already finished; nothing to migrate")
+        if quiesce_ticks > 0:
+            slot.session.quiesce(
+                max_ticks=quiesce_ticks, idle_sleep_s=slot.DRAIN_IDLE_SLEEP_S
+            )
+        tree = slot.session.snapshot()
+        if slot.manager is not None:
+            slot.manager.wait()
+            slot.manager.save(slot.session.t, tree)
+        self._slots.remove(slot)
+        if slot in self._live:
+            self._live.remove(slot)
+        self.agg.n_tenants = len(self._slots)
+        return tree, slot.it
+
+    # -- scheduling --------------------------------------------------------
+
+    def round(self) -> bool:
+        """One scheduler round over all live tenants.  Returns True while
+        any tenant still wants scheduling."""
+        try:
+            return self._round()
+        except BaseException:
+            # Settle in-flight background snapshot writes before the crash
+            # propagates: a supervised restart in this process must never
+            # race an orphaned writer thread for the same step directory.
+            for s in self._slots:
+                if s.manager is not None:
+                    with contextlib.suppress(Exception):
+                        s.manager.wait()
+            raise
+
+    def _round(self) -> bool:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        if not self._live:
+            return False
+        self.agg.rounds += 1
+        if self.sched == "drr":
+            # Credit is sized by the smallest *ticking* tenant: a tenant
+            # that is only draining costs no device time and must not gate
+            # everyone else's budget (a small drained tenant stuck waiting
+            # out a slow teacher would otherwise collapse live tenants to
+            # ~1 tick per S_big/S_small rounds).
+            ticking = [s.s for s in self._live if not s.draining]
+            credit = self.quantum * min(ticking) if ticking else 0
+            nxt = []
+            for s in self._live:
+                s.deficit += credit
+                n = int(s.deficit // s.s)
+                live = s.step(self.drain, n)
+                s.deficit -= s.last_ticks * s.s
+                if s.draining:
+                    s.deficit = 0.0  # drained slices don't consume credit
+                if live:
+                    nxt.append(s)
+            self._live = nxt
+        else:
+            self._live = [s for s in self._live if s.step(self.drain, self.quantum)]
+        return bool(self._live)
+
+    def run(self) -> tuple[dict[str, TenantResult], MultiplexStats]:
+        while self.round():
+            pass
+        return self.results()
+
+    def results(self) -> tuple[dict[str, TenantResult], MultiplexStats]:
+        """Finalize and collect per-tenant results + aggregate stats."""
+        if self._live:
+            raise RuntimeError("results() with tenants still live; drive round()")
+        if self._t0 is not None:
+            self.agg.wall_s = time.perf_counter() - self._t0
+        self.agg.stream_steps = sum(s.result.stats.stream_steps for s in self._slots)
+        self.agg.ticks = sum(s.result.stats.ticks for s in self._slots)
+        # Snapshots *taken* this run (keep-k GC prunes the directories, so
+        # counting surviving step dirs would undercount).
+        self.agg.snapshots = sum(s.snapshots_taken for s in self._slots)
+        return {s.tenant.name: s.result for s in self._slots}, self.agg
+
+
 def run(
     tenants: list[Tenant],
     drain: bool = True,
     quantum: int = DEFAULT_QUANTUM,
+    sched: str = "rr",
+    snapshot_dir: Optional[str] = None,
+    snapshot_every: int = 0,
+    resume: bool = False,
 ) -> tuple[dict[str, TenantResult], MultiplexStats]:
-    """Multiplex every tenant's stream over this process, round-robin.
+    """Multiplex every tenant's stream over this process to completion.
 
     ``quantum`` is the scheduler time slice: how many consecutive ticks one
     tenant runs before the scheduler moves on.  Switching tenants every
     tick (quantum=1) evicts the previous tenant's state (P alone is
     S·N²·4 bytes) from cache on every switch and costs ~15-45% aggregate
     throughput at S=512; a few ticks per slice amortize that while keeping
-    per-tenant scheduling delay bounded by (n_tenants-1)·quantum ticks.
-    The per-tenant result is bit-for-bit identical for every quantum — only
-    wall-clock interleaving changes (a weighted/fairness scheduler is a
-    ROADMAP follow-on).
+    per-tenant scheduling delay bounded.  ``sched="drr"`` measures the
+    slice in stream-steps instead of ticks so small tenants are not
+    starved by huge ones (see module docstring).  The per-tenant result is
+    bit-for-bit identical for every quantum and scheduler — only
+    wall-clock interleaving changes.
+
+    ``snapshot_dir`` + ``snapshot_every`` enable per-tenant durability;
+    ``resume=True`` restores tenants from their latest published snapshot
+    (tick sources must then be seekable — ``snapshot.ResumableTicks``).
 
     Returns ``(results, agg)``: ``results[name]`` is that tenant's
     ``(state, outputs, stats)`` — identical to what a solo ``stream.run``
@@ -205,24 +522,67 @@ def run(
     """
     if not tenants:
         raise ValueError("multiplex.run needs at least one tenant")
-    if quantum < 1:
-        raise ValueError(f"quantum must be >= 1, got {quantum}")
-    names = [t.name for t in tenants]
-    if len(set(names)) != len(names):
-        raise ValueError(f"tenant names must be unique, got {names}")
+    return Multiplexer(
+        tenants,
+        drain=drain,
+        quantum=quantum,
+        sched=sched,
+        snapshot_dir=snapshot_dir,
+        snapshot_every=snapshot_every,
+        resume=resume,
+    ).run()
 
-    slots = [_Slot(t) for t in tenants]
-    agg = MultiplexStats(n_tenants=len(tenants))
-    t0 = time.perf_counter()
-    live = list(slots)
-    while live:
-        agg.rounds += 1
-        live = [s for s in live if s.step(drain, quantum)]
-    agg.wall_s = time.perf_counter() - t0
-    for s in slots:
-        agg.stream_steps += s.result.stats.stream_steps
-        agg.ticks += s.result.stats.ticks
-    return {s.tenant.name: s.result for s in slots}, agg
+
+def run_supervised(
+    make_tenants,
+    snapshot_dir: str,
+    snapshot_every: int = 1000,
+    max_restarts: int = 3,
+    **kw,
+):
+    """Crash-restart supervision around a durable multiplexed run.
+
+    ``make_tenants()`` must build a *fresh* tenant list (fresh teacher
+    instances, seekable tick sources) on every attempt — the previous
+    attempt's objects died with it.  Each attempt resumes every tenant
+    from its latest published snapshot under ``snapshot_dir`` (or from
+    scratch when none exists yet); ``runtime.fault.run_with_restarts``
+    bounds the retry loop.
+    """
+
+    class _DirView:
+        """Adapter: the per-tenant snapshot directory tree viewed as one
+        checkpointed unit for the supervisor (restore is a no-op — each
+        tenant restores itself from its own subdirectory)."""
+
+        def latest_step(self):
+            steps = [
+                s
+                for name in (
+                    os.listdir(snapshot_dir) if os.path.isdir(snapshot_dir) else []
+                )
+                if os.path.isdir(os.path.join(snapshot_dir, name))
+                for s in [CheckpointManager(os.path.join(snapshot_dir, name)).latest_step()]
+                if s is not None
+            ]
+            return max(steps) if steps else None
+
+        def restore(self):
+            return self.latest_step(), None
+
+    def run_attempt(state, start_step):
+        del state, start_step  # per-tenant restore happens inside run()
+        return run(
+            make_tenants(),
+            snapshot_dir=snapshot_dir,
+            snapshot_every=snapshot_every,
+            resume=True,
+            **kw,
+        )
+
+    return fault.run_with_restarts(
+        lambda: None, run_attempt, _DirView(), max_restarts=max_restarts
+    )
 
 
 # The multiplexer's compiled-executable sharing is observable here: tenant

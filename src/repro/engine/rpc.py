@@ -16,6 +16,18 @@ object per line.
              "feats": [[f, ...], ...]}
   reply:    {"ticket": int, "labels": [int, ...], "answered": [bool, ...]}
 
+Authentication (``secret=...`` / ``--secret``): a *mutual* shared-secret
+HMAC challenge–response on connect.  The server opens every connection
+with ``{"challenge": <hex nonce>}``; the client answers
+``{"auth": HMAC_SHA256(secret, challenge), "nonce": <hex nonce>}``; the
+server verifies the digest and answers the client's nonce with
+``{"auth_ok": HMAC_SHA256(secret, nonce)}`` before any label traffic.  A
+wrong or missing digest closes the socket (an unauthenticated client
+never receives a label), and a server that cannot answer the client's
+nonce — an imposter that merely emits a challenge — is rejected by the
+client before any of its labels can train the fleet.  Without a secret
+the handshake is skipped entirely (backwards compatible).
+
 The bundled ``LabelServer`` answers deterministically —
 ``label[s] = (7 * tick + s) % n_out`` — so round-trip tests can assert
 exact labels; a real deployment would put the pod-side backbone ensemble
@@ -34,9 +46,11 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import hmac
 import json
 import os
 import pathlib
+import secrets as secrets_mod
 import socket
 import subprocess
 import sys
@@ -54,6 +68,12 @@ def expected_label(tick: int, s: int, n_out: int) -> int:
     return (7 * tick + s) % n_out
 
 
+def _digest(secret: str, challenge: str) -> str:
+    return hmac.new(
+        secret.encode(), challenge.encode(), "sha256"
+    ).hexdigest()
+
+
 # ---------------------------------------------------------------------------
 # Server
 # ---------------------------------------------------------------------------
@@ -63,9 +83,11 @@ class LabelServer:
     """Threaded loopback label server (one thread per client connection)."""
 
     def __init__(self, port: int = 0, n_out: int = 6, delay_s: float = 0.0,
-                 host: str = "127.0.0.1"):
+                 host: str = "127.0.0.1", secret: Optional[str] = None):
         self.n_out = n_out
         self.delay_s = delay_s
+        self.secret = secret
+        self.auth_failures = 0  # connections rejected by the HMAC handshake
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -97,6 +119,9 @@ class LabelServer:
 
     def _client(self, conn: socket.socket) -> None:
         with conn, conn.makefile("rwb") as f:
+            if self.secret is not None and not self._handshake(f):
+                self.auth_failures += 1
+                return  # close unauthenticated connections before any label
             for line in f:
                 try:
                     req = json.loads(line)
@@ -115,6 +140,37 @@ class LabelServer:
                     f.flush()
                 except OSError:
                     break
+
+    def _handshake(self, f) -> bool:
+        """Mutual challenge–response: send a nonce, require its keyed digest
+        back (constant-time compare), then prove *our* knowledge of the
+        secret by answering the client's nonce — all before serving a
+        single label."""
+        challenge = secrets_mod.token_hex(16)
+        try:
+            f.write((json.dumps({"challenge": challenge}) + "\n").encode())
+            f.flush()
+            line = f.readline()
+        except OSError:
+            return False
+        try:
+            reply = json.loads(line)
+        except json.JSONDecodeError:
+            return False
+        if not isinstance(reply, dict):
+            return False
+        if not hmac.compare_digest(
+            str(reply.get("auth", "")), _digest(self.secret, challenge)
+        ):
+            return False
+        try:
+            f.write((json.dumps(
+                {"auth_ok": _digest(self.secret, str(reply.get("nonce", "")))}
+            ) + "\n").encode())
+            f.flush()
+        except OSError:
+            return False
+        return True
 
 
 # ---------------------------------------------------------------------------
@@ -138,10 +194,52 @@ class RpcTeacher:
     """
 
     def __init__(self, host: str, port: int, timeout_s: float = 5.0,
-                 connect_timeout_s: float = 5.0):
+                 connect_timeout_s: float = 5.0, secret: Optional[str] = None):
         self.timeout_s = timeout_s
         self._sock = socket.create_connection((host, port), timeout=connect_timeout_s)
         self._wfile = self._sock.makefile("wb")
+        if secret is not None:
+            # Mutual authentication, synchronously, before the reader thread
+            # owns the socket: answer the server's nonce with its keyed
+            # digest, then require the server to answer OURS — a server that
+            # sends no challenge, or that cannot prove it knows the secret
+            # (an imposter emitting a bare challenge to fish for labels to
+            # train us on), is refused before any label traffic.
+            with self._sock.makefile("rb") as rf:
+                try:
+                    hello = json.loads(rf.readline())
+                except (OSError, json.JSONDecodeError):
+                    hello = None  # silent/closed server: not authenticated
+                if not isinstance(hello, dict) or "challenge" not in hello:
+                    self._sock.close()
+                    raise ConnectionError(
+                        "label server sent no auth challenge but a "
+                        "--teacher-secret is configured; refusing the "
+                        "unauthenticated connection"
+                    )
+                nonce = secrets_mod.token_hex(16)
+                self._wfile.write((json.dumps({
+                    "auth": _digest(secret, hello["challenge"]),
+                    "nonce": nonce,
+                }) + "\n").encode())
+                self._wfile.flush()
+                try:
+                    proof = json.loads(rf.readline())
+                except (OSError, json.JSONDecodeError):
+                    proof = None
+            ok = isinstance(proof, dict) and hmac.compare_digest(
+                str(proof.get("auth_ok", "")), _digest(secret, nonce)
+            )
+            if not ok:
+                self._sock.close()
+                raise ConnectionError(
+                    "label server failed to prove knowledge of the shared "
+                    "secret; refusing to train on its labels"
+                )
+        # connect_timeout_s governed the dial (and the auth readline above);
+        # steady-state reads must block indefinitely — reply deadlines are
+        # enforced per ticket, not by a socket idle timeout.
+        self._sock.settimeout(None)
         self._lock = threading.Lock()
         self._next_ticket = 0
         # ticket -> wall deadline; present == still in flight.
@@ -159,6 +257,8 @@ class RpcTeacher:
                         msg = json.loads(line)
                     except json.JSONDecodeError:
                         continue
+                    if not isinstance(msg, dict) or "ticket" not in msg:
+                        continue  # e.g. an unexpected auth challenge
                     reply = TeacherReply(
                         ticket=int(msg["ticket"]),
                         labels=np.asarray(msg["labels"], np.int32),
@@ -236,18 +336,19 @@ class RpcTeacher:
 
 
 @contextlib.contextmanager
-def loopback_server(n_out: int = 6, delay_s: float = 0.0):
+def loopback_server(n_out: int = 6, delay_s: float = 0.0,
+                    secret: Optional[str] = None):
     """Spawn ``python -m repro.engine.rpc`` as a subprocess label server on
     an ephemeral loopback port; yields ``(host, port)`` and tears the
     process down on exit."""
     src_root = str(pathlib.Path(__file__).resolve().parents[2])
     env = dict(os.environ)
     env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
-    proc = subprocess.Popen(
-        [sys.executable, "-m", "repro.engine.rpc", "--port", "0",
-         "--n-out", str(n_out), "--delay-ms", str(int(delay_s * 1000))],
-        stdout=subprocess.PIPE, env=env, text=True,
-    )
+    cmd = [sys.executable, "-m", "repro.engine.rpc", "--port", "0",
+           "--n-out", str(n_out), "--delay-ms", str(int(delay_s * 1000))]
+    if secret is not None:
+        cmd += ["--secret", secret]
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, env=env, text=True)
     try:
         line = proc.stdout.readline()
         if not line.startswith("PORT "):
@@ -259,23 +360,39 @@ def loopback_server(n_out: int = 6, delay_s: float = 0.0):
 
 
 def _selftest() -> int:
-    """One full round trip over a subprocess loopback server (CI smoke)."""
+    """Round trips over a subprocess loopback server (CI smoke): plain, then
+    HMAC-authenticated, then an unauthenticated client against a secured
+    server (must get nothing)."""
     s, n_out = 4, 6
     feats = np.zeros((s, 3), np.float32)
     mask = np.ones((s,), bool)
-    with loopback_server(n_out=n_out) as (host, port):
-        with RpcTeacher(host, port, timeout_s=10.0) as teacher:
+
+    def roundtrip(host, port, secret=None, timeout_s=10.0):
+        with RpcTeacher(host, port, timeout_s=timeout_s, secret=secret) as teacher:
             ticket = teacher.ask(feats, mask, tick=3)
             deadline = time.monotonic() + 10.0
             replies = []
             while not replies and time.monotonic() < deadline:
+                if teacher.in_flight() == 0 and not replies:
+                    replies = teacher.poll(0)
+                    break
                 replies = teacher.poll(0)
                 time.sleep(0.01)
-            assert replies and replies[0].ticket == ticket, "no reply"
-            want = [expected_label(3, i, n_out) for i in range(s)]
-            assert replies[0].labels.tolist() == want, replies[0].labels
-            assert teacher.in_flight() == 0
-    print("rpc selftest OK:", want)
+            return ticket, replies
+
+    want = [expected_label(3, i, n_out) for i in range(s)]
+    with loopback_server(n_out=n_out) as (host, port):
+        ticket, replies = roundtrip(host, port)
+        assert replies and replies[0].ticket == ticket, "no reply"
+        assert replies[0].labels.tolist() == want, replies[0].labels
+    with loopback_server(n_out=n_out, secret="s3cr3t") as (host, port):
+        ticket, replies = roundtrip(host, port, secret="s3cr3t")
+        assert replies and replies[0].labels.tolist() == want, "auth roundtrip"
+        # Unauthenticated client: the server closes the connection; the ask
+        # times out into loss and no label ever arrives.
+        _, replies = roundtrip(host, port, secret=None, timeout_s=0.5)
+        assert not replies, "unauthenticated client must receive nothing"
+    print("rpc selftest OK (plain + hmac + reject):", want)
     return 0
 
 
@@ -285,13 +402,16 @@ def main(argv=None) -> int:
     ap.add_argument("--n-out", type=int, default=6)
     ap.add_argument("--delay-ms", type=int, default=0,
                     help="server-side per-request delay (timeout testing)")
+    ap.add_argument("--secret", default=None,
+                    help="shared secret: require the HMAC challenge-response "
+                    "handshake on every connection")
     ap.add_argument("--selftest", action="store_true",
                     help="spawn a loopback server and round-trip one ask")
     args = ap.parse_args(argv)
     if args.selftest:
         return _selftest()
     server = LabelServer(port=args.port, n_out=args.n_out,
-                         delay_s=args.delay_ms / 1000.0)
+                         delay_s=args.delay_ms / 1000.0, secret=args.secret)
     print(f"PORT {server.port}", flush=True)
     server.serve_forever()
     return 0

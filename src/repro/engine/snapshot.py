@@ -1,0 +1,417 @@
+"""Durable sessions: full-fidelity snapshot/restore of a live StreamSession.
+
+The paper's premise is that on-device learned state is *paid for*: every
+teacher query costs mJ-scale communication energy, so a crash that discards
+a tenant's trained ``beta``/``P`` throws away real joules.  This module
+serializes everything a ``StreamSession`` (``engine/stream.py``) needs to
+continue exactly where it stopped:
+
+  * the ``EngineState`` pytree (elm / prune ladder / drift detector / comm
+    meter — every leaf, bit-exact through host numpy);
+  * the ``PendingRing`` contents, each entry with its plan-time
+    ``PlanOutput`` context (h / pred / confidence / theta), its raw
+    features (so a fresh teacher connection can *re-ask* it), and its
+    ticket id;
+  * backpressure-policy state: ``block``'s deferred-ask queue and — via
+    the ring entries' ``queried`` masks — ``coalesce``'s in-flight merge
+    map (coalesce coverage is derived state: it is exactly the union of
+    live ring masks, so restoring the ring restores the merge map);
+  * ``StreamStats`` counters and the deterministic latency histogram;
+  * the in-flight (dispatched, not yet finished) tick's features and
+    ``PlanOutput``;
+  * the tick-source cursor (``ticks_consumed``) so a resumable source can
+    be repositioned; and
+  * the teacher's internal state, when the teacher supports it
+    (``snapshot_state()`` / ``restore_snapshot()`` — ``LatencyTeacher``
+    does: RNG, ticket counter, undelivered inbox).
+
+Published atomically through ``runtime/checkpoint.py`` — the payload is a
+pytree of numpy leaves (plus one JSON metadata leaf), so
+``CheckpointManager.save`` gives atomic rename-publish, keep-k GC, and the
+crashed-mid-write fallback for free.
+
+Restore guarantee: with a snapshot-capable deterministic teacher, a session
+snapshotted at tick k and restored into a fresh process replays the exact
+op sequence of the uninterrupted run — final ``EngineState``, outputs, and
+accounting are bit-for-bit identical (locked by ``tests/test_snapshot.py``
+for every backpressure policy).  With a teacher that cannot be snapshot
+(e.g. ``engine.rpc.RpcTeacher`` — sockets do not survive a process), the
+in-flight ring entries are either *re-asked* through the fresh teacher
+(``pending="reask"``, metered as ``tickets_reasked``; the queries stay
+counted once in ``queries_issued`` so the accounting identity is
+preserved) or *dropped* (``pending="drop"``, metered as lost).
+
+``engine/durable.py`` is the single-session driver (cadence snapshots +
+crash-restart); ``engine/multiplex.py`` wires per-tenant snapshots,
+resume, and live tenant migration (quiesce → snapshot → restore into
+another multiplexer) on top of these primitives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Iterable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import drift as drift_mod
+from repro.core import labels as labels_mod
+from repro.core import oselm, pruning
+from repro.engine import fleet, stream
+from repro.engine.types import EngineConfig, EngineState
+
+SNAPSHOT_VERSION = 1
+
+# How a restore handles ring entries whose teacher state could not come
+# along (socket teachers): re-ask them through the fresh teacher, drop them
+# (metered as lost), or pick automatically (restore the teacher when it
+# supports snapshots, re-ask otherwise).
+PENDING_POLICIES = ("auto", "reask", "drop")
+
+
+# ---------------------------------------------------------------------------
+# Config <-> JSON-able dict
+# ---------------------------------------------------------------------------
+
+
+def config_to_dict(cfg: EngineConfig) -> dict:
+    """EngineConfig as a JSON-able dict (tuples become lists)."""
+    return {
+        "elm": dataclasses.asdict(cfg.elm),
+        "prune": dataclasses.asdict(cfg.prune),
+        "drift": dataclasses.asdict(cfg.drift),
+    }
+
+
+def config_from_dict(d: dict) -> EngineConfig:
+    prune = dict(d["prune"])
+    prune["ladder"] = tuple(prune["ladder"])
+    return EngineConfig(
+        elm=oselm.OSELMConfig(**d["elm"]),
+        prune=pruning.PruneConfig(**prune),
+        drift=drift_mod.DriftConfig(**d["drift"]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pytree <-> numpy trees (CheckpointManager restores dicts/lists, not
+# NamedTuples, so we serialize by field name and rebuild explicitly)
+# ---------------------------------------------------------------------------
+
+
+def _np_tree(nt) -> dict:
+    """NamedTuple of arrays -> {field: host numpy array}.
+
+    ``np.array`` (copy), not ``np.asarray``: on CPU a jax array and its
+    numpy view can share memory, and the session keeps dispatching donated
+    updates while the checkpoint writer thread serializes this tree — the
+    snapshot must own its bytes.
+    """
+    return {k: np.array(v) for k, v in nt._asdict().items()}
+
+
+def state_to_tree(state: EngineState) -> dict:
+    return {
+        "elm": _np_tree(state.elm),
+        "prune": _np_tree(state.prune),
+        "drift": _np_tree(state.drift),
+        "meter": _np_tree(state.meter),
+    }
+
+
+def state_from_tree(tree: dict) -> EngineState:
+    def build(cls, d):
+        return cls(**{k: jnp.asarray(d[k]) for k in cls._fields})
+
+    return EngineState(
+        elm=build(oselm.OSELMState, tree["elm"]),
+        prune=build(pruning.PruneState, tree["prune"]),
+        drift=build(drift_mod.DriftState, tree["drift"]),
+        meter=build(labels_mod.CommMeter, tree["meter"]),
+    )
+
+
+def _plan_to_tree(p: fleet.PlanOutput) -> dict:
+    return _np_tree(p)
+
+
+def _plan_from_tree(d: dict) -> fleet.PlanOutput:
+    return fleet.PlanOutput(
+        **{k: jnp.asarray(d[k]) for k in fleet.PlanOutput._fields}
+    )
+
+
+def _meta_leaf(meta: dict) -> np.ndarray:
+    # One 0-d unicode leaf: np.save/np.load round-trips it without pickle,
+    # and arbitrary-precision ints (the PCG64 state) survive via JSON.
+    return np.asarray(json.dumps(meta))
+
+
+def _meta_of(tree: dict) -> dict:
+    return json.loads(np.asarray(tree["meta"]).item())
+
+
+# ---------------------------------------------------------------------------
+# Resumable tick sources (the "tick-source cursor" of a snapshot)
+# ---------------------------------------------------------------------------
+
+
+class ResumableTicks:
+    """Tick source with a cursor: ``factory(start)`` builds an iterator
+    positioned at tick ``start``.  The cursor counts ticks yielded, is
+    recorded in every snapshot (``ticks_consumed``), and ``seek`` repoints
+    the source for resume — the snapshot subsystem's contract for "the
+    stream can be replayed from tick k".
+    """
+
+    def __init__(self, factory: Callable[[int], Iterable], start: int = 0):
+        self.factory = factory
+        self.cursor = start
+        self._it = None
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._it is None:
+            self._it = iter(self.factory(self.cursor))
+        x = next(self._it)  # StopIteration propagates to the driver
+        self.cursor += 1
+        return x
+
+    def seek(self, tick: int) -> "ResumableTicks":
+        self._it = None
+        self.cursor = int(tick)
+        return self
+
+
+def array_ticks(xs) -> ResumableTicks:
+    """Resumable view of a materialized (T, S, n_in) array (or list of
+    per-tick arrays) — seek is an index, no replay cost."""
+
+    def factory(start):
+        for t in range(start, len(xs)):
+            yield xs[t]
+
+    return ResumableTicks(factory)
+
+
+def seek_ticks(ticks, consumed: int) -> None:
+    """Reposition a tick source at ``consumed`` ticks for resume; raises if
+    the source is a plain iterator (snapshots record the cursor, but only a
+    seekable source — ``ResumableTicks`` or anything with ``seek`` — can
+    act on it)."""
+    seek = getattr(ticks, "seek", None)
+    if seek is None:
+        raise ValueError(
+            "resume needs a seekable tick source (snapshot.ResumableTicks "
+            f"or an object with .seek), got {type(ticks).__name__}"
+        )
+    seek(consumed)
+
+
+# ---------------------------------------------------------------------------
+# Capture
+# ---------------------------------------------------------------------------
+
+
+def _entry_tree(ent: stream.PendingTicket) -> dict:
+    return {
+        "tick": np.asarray(ent.tick, np.int64),
+        "queried": np.asarray(ent.queried, bool),
+        "x": np.asarray(ent.x),
+        "plan": _plan_to_tree(ent.plan),
+    }
+
+
+def capture(sess: "stream.StreamSession") -> dict:
+    """Serialize a live session to a pytree of numpy leaves + JSON meta.
+
+    The session keeps running afterwards — capture is read-only (it forces
+    device→host syncs of the state and any in-flight plan context).  Wall
+    time elapsed so far is folded into the captured ``wall_s`` so resumed
+    stats keep accumulating from the right total.
+    """
+    if sess._finished:
+        raise RuntimeError("cannot snapshot a finished session")
+    stats = sess.stats
+    wall_s = stats.wall_s
+    if sess._t_start is not None:
+        wall_s += time.perf_counter() - sess._t_start
+    counters = {
+        f.name: getattr(stats, f.name)
+        for f in dataclasses.fields(stream.StreamStats)
+        if f.name not in ("tick_ms", "label_latency_ticks", "wall_s")
+    }
+    meta = {
+        "version": SNAPSHOT_VERSION,
+        "t": sess.t,
+        "mode": sess.mode,
+        "backpressure": sess.backpressure,
+        "capacity": sess.ring.capacity,
+        "collect": sess.collect,
+        "donate": sess._donate,
+        "started": sess.started(),
+        "has_pending": sess._p is not None,
+        "ticks_consumed": sess.t + (1 if sess._x is not None else 0),
+        "s": int(np.shape(np.asarray(sess.state.elm.count))[0]),
+        "cfg": config_to_dict(sess.cfg),
+        "stats": {**counters, "wall_s": wall_s},
+        "ring_tickets": [int(t) for t in sess.ring.tickets()],
+        "teacher_snapshot": hasattr(sess.teacher, "snapshot_state"),
+    }
+    tree: dict = {
+        "meta": _meta_leaf(meta),
+        "state": state_to_tree(sess.state),
+        "ring": [_entry_tree(e) for e in sess.ring.entries()],
+        "deferred": [
+            {
+                "tick": np.asarray(d.tick, np.int64),
+                "queried": np.asarray(d.queried, bool),
+                "x": np.asarray(d.x),
+                "plan": _plan_to_tree(d.plan),
+            }
+            for d in sess._deferred
+        ],
+        "stats": {
+            "tick_ms": np.asarray(stats.tick_ms, np.float64),
+            "label_latency_ticks": np.asarray(
+                stats.label_latency_ticks, np.float64
+            ),
+        },
+    }
+    if sess._p is not None:
+        tree["pending"] = {"x": np.asarray(sess._x), "plan": _plan_to_tree(sess._p)}
+    if meta["teacher_snapshot"]:
+        tree["teacher"] = sess.teacher.snapshot_state()
+    if sess.collect and sess._cols["pred"]:
+        tree["collected"] = {
+            k: np.stack(v) for k, v in sess._cols.items()
+        }
+        tree["collected"]["trained"] = np.stack(sess._trained_rows)
+    return tree
+
+
+def ticks_consumed(tree: dict) -> int:
+    """How many ticks the snapshotted session had pulled from its source —
+    the cursor a resumed tick source must seek to."""
+    return int(_meta_of(tree)["ticks_consumed"])
+
+
+# ---------------------------------------------------------------------------
+# Restore
+# ---------------------------------------------------------------------------
+
+
+def restore(
+    tree: dict,
+    teacher: "stream.Teacher",
+    cfg: Optional[EngineConfig] = None,
+    ship: Optional[Callable] = None,
+    pending: str = "auto",
+) -> "stream.StreamSession":
+    """Rebuild a ``StreamSession`` from a :func:`capture` tree.
+
+    ``teacher`` is a *fresh* teacher instance (the old object died with its
+    process).  If both the snapshot and the teacher support teacher state
+    (``restore_snapshot``), the teacher is restored bit-for-bit — in-flight
+    tickets will be answered exactly as in the uninterrupted run.
+    Otherwise the ring's in-flight entries are handled per ``pending``:
+    ``"reask"`` re-submits each one through the fresh teacher (new ticket
+    ids, metered as ``tickets_reasked``; their queries remain counted once
+    in ``queries_issued``), ``"drop"`` meters them as lost, and ``"auto"``
+    picks reask.  Either way the query-accounting identity survives the
+    restore.
+    """
+    if pending not in PENDING_POLICIES:
+        raise ValueError(
+            f"unknown pending policy {pending!r}; choose one of {PENDING_POLICIES}"
+        )
+    meta = _meta_of(tree)
+    if meta["version"] != SNAPSHOT_VERSION:
+        raise ValueError(
+            f"snapshot version {meta['version']} != supported {SNAPSHOT_VERSION}"
+        )
+    if cfg is None:
+        cfg = config_from_dict(meta["cfg"])
+    sess = stream.StreamSession(
+        state_from_tree(tree["state"]),
+        cfg,
+        teacher,
+        mode=meta["mode"],
+        capacity=meta["capacity"],
+        backpressure=meta["backpressure"],
+        collect=meta["collect"],
+        donate=meta["donate"],
+        ship=ship,
+    )
+    sess.t = meta["t"]
+    sess._t_start = time.perf_counter() if meta["started"] else None
+
+    stats = sess.stats
+    for name, value in meta["stats"].items():
+        setattr(stats, name, type(getattr(stats, name))(value))
+    for x in np.asarray(tree["stats"]["tick_ms"]).tolist():
+        stats.tick_ms.append(x)
+    for x in np.asarray(tree["stats"]["label_latency_ticks"]).tolist():
+        stats.label_latency_ticks.append(x)
+
+    entries = [
+        stream.PendingTicket(
+            tick=int(np.asarray(e["tick"])),
+            queried=np.asarray(e["queried"], bool),
+            plan=_plan_from_tree(e["plan"]),
+            x=sess.ship(np.asarray(e["x"])),
+        )
+        for e in tree["ring"]
+    ]
+    tickets = [int(t) for t in meta["ring_tickets"]]
+
+    restore_fn = getattr(teacher, "restore_snapshot", None)
+    if pending == "auto" and "teacher" in tree and restore_fn is not None:
+        # Same-host resume: the teacher continues bit-for-bit (RNG, ticket
+        # counter, undelivered inbox), so the old ticket ids stay valid.
+        restore_fn(tree["teacher"])
+        for ticket, ent in zip(tickets, entries):
+            sess.ring.push(ticket, ent)
+    elif entries and pending != "drop":
+        # Fresh teacher: the old tickets mean nothing to it.  Re-ask each
+        # in-flight entry (oldest first, original order preserved) with its
+        # captured features and origin tick; the plan-time context rides
+        # along so the eventual answer is judged exactly as it would have
+        # been.  These are new wire asks (tickets_issued) but NOT new
+        # decisions (queries_issued unchanged) — the identity holds.
+        for ent in entries:
+            ticket = teacher.ask(ent.x, ent.queried, ent.tick)
+            stats.tickets_issued += 1
+            stats.tickets_reasked += 1
+            sess.ring.push(ticket, ent)
+    elif entries:
+        # pending="drop": the in-flight queries can never be answered.
+        for ent in entries:
+            stats.tickets_lost += 1
+            stats.queries_lost += int(ent.queried.sum())
+
+    for d in tree["deferred"]:
+        sess._deferred.append(
+            stream.DeferredAsk(
+                tick=int(np.asarray(d["tick"])),
+                x=sess.ship(np.asarray(d["x"])),
+                queried=np.asarray(d["queried"], bool),
+                plan=_plan_from_tree(d["plan"]),
+            )
+        )
+
+    if meta["has_pending"]:
+        sess._x = sess.ship(np.asarray(tree["pending"]["x"]))
+        sess._p = _plan_from_tree(tree["pending"]["plan"])
+
+    if "collected" in tree:
+        col = tree["collected"]
+        for k in sess._cols:
+            sess._cols[k] = [np.array(row) for row in np.asarray(col[k])]
+        sess._trained_rows = [np.array(row) for row in np.asarray(col["trained"])]
+    return sess

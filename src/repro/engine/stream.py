@@ -61,6 +61,11 @@ outage, timeout, or partial-answer residue), or ``queries_coalesced``
 With a zero-latency teacher the runtime reproduces ``run_fleet`` outputs
 and final state bit-for-bit (locked by ``tests/test_stream.py``): ``plan``
 and ``learn`` are the exact two halves of ``fleet_step``.
+
+Sessions are durable: ``StreamSession.snapshot()`` serializes the whole
+runtime state (engine pytree, ring + plan-time contexts, policy state,
+stats, tick cursor, teacher state when supported) and ``restore`` resumes
+it bit-for-bit — see ``engine/snapshot.py`` and ``tests/test_snapshot.py``.
 """
 
 from __future__ import annotations
@@ -68,6 +73,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import json
 import time
 from typing import Callable, Iterable, NamedTuple, Optional, Protocol
 
@@ -202,14 +208,58 @@ class LatencyTeacher:
     def in_flight(self):
         return len(self._inbox)
 
+    # -- snapshot support (engine/snapshot.py) -----------------------------
+
+    def snapshot_state(self) -> dict:
+        """Full teacher state as a numpy/JSON tree: RNG, ticket counter, and
+        the undelivered inbox — restoring it makes a resumed run answer
+        bit-for-bit like the uninterrupted one.  ``label_fn`` is NOT
+        serialized; the restoring process reconstructs the teacher with the
+        same label source before calling ``restore_snapshot``."""
+        meta = {
+            "kind": "latency",
+            "next_ticket": self._next_ticket,
+            "rng": self._rng.bit_generator.state,  # JSON-able (arbitrary ints)
+        }
+        return {
+            "meta": np.asarray(json.dumps(meta, default=int)),
+            "inbox": [
+                {
+                    "due": np.asarray(due, np.int64),
+                    "ticket": np.asarray(ticket, np.int64),
+                    "answered": np.asarray(answered, bool),
+                    "labels": np.asarray(labels, np.int32),
+                }
+                for due, ticket, answered, labels in self._inbox
+            ],
+        }
+
+    def restore_snapshot(self, tree: dict) -> None:
+        meta = json.loads(np.asarray(tree["meta"]).item())
+        self._next_ticket = int(meta["next_ticket"])
+        self._rng.bit_generator.state = meta["rng"]
+        self._inbox = [
+            (
+                int(np.asarray(e["due"])),
+                int(np.asarray(e["ticket"])),
+                np.asarray(e["answered"], bool),
+                np.asarray(e["labels"], np.int32),
+            )
+            for e in tree["inbox"]
+        ]
+
 
 class PendingTicket(NamedTuple):
     """What must survive the teacher round-trip: the plan-time features and
-    controller context of one asked tick."""
+    controller context of one asked tick.  ``x`` (the raw tick features)
+    rides along so a snapshot restored against a *fresh* teacher connection
+    can re-ask the in-flight queries (engine/snapshot.py); the ring is
+    bounded, so this holds at most ``capacity`` extra (S, n_in) buffers."""
 
     tick: int
     queried: np.ndarray  # (S,) bool host copy of the asked mask
     plan: fleet.PlanOutput  # device arrays captured at query time
+    x: object  # the tick's raw features (whatever the iterator yielded)
 
 
 class DeferredAsk(NamedTuple):
@@ -254,6 +304,10 @@ class PendingRing:
         """Live entries, oldest first (read-only view for coverage scans)."""
         return self._slots.values()
 
+    def tickets(self):
+        """Live ticket ids, oldest first (snapshot serialization)."""
+        return self._slots.keys()
+
     def drain(self):
         """Remove and return all entries (oldest first)."""
         out = list(self._slots.values())
@@ -290,6 +344,7 @@ class StreamStats:
     tickets_coalesced: int = 0  # asks merged (at least partly) into in-flight
     queries_coalesced: int = 0  # stream-queries settled by an in-flight ticket
     asks_deferred: int = 0  # ``block``: asks that waited for a ring slot
+    tickets_reasked: int = 0  # in-flight tickets re-submitted after a restore
     wall_s: float = 0.0
     tick_ms: "collections.deque" = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=STATS_WINDOW)
@@ -344,6 +399,7 @@ class StreamStats:
             "tickets_coalesced": self.tickets_coalesced,
             "queries_coalesced": self.queries_coalesced,
             "asks_deferred": self.asks_deferred,
+            "tickets_reasked": self.tickets_reasked,
             "queries_reconciled": self.reconciled,
             "tick_p50_ms": self.tick_p50_ms,
             "tick_p95_ms": self.tick_p95_ms,
@@ -483,6 +539,7 @@ class StreamSession:
             # Own the buffers we are about to donate tick after tick; the
             # caller's state must survive the run.
             state = jax.tree.map(jnp.copy, state)
+        self._donate = donate
         self.state = state
         self.cfg = cfg
         self.teacher = teacher
@@ -632,6 +689,27 @@ class StreamSession:
                 time.sleep(idle_sleep_s)
         return False
 
+    def quiesce(
+        self,
+        max_ticks: int = 4096,
+        idle_sleep_s: float = DRAIN_IDLE_SLEEP_S,
+    ) -> bool:
+        """Migration quiesce: wait out in-flight replies *without* advancing
+        the session's tick clock.  ``drain_replies`` is for an exhausted
+        tick source and lets ``t`` run on; a live migration happens
+        mid-stream, where ``t`` must keep matching the tick source after
+        the move.  Polls at a virtual time horizon, applies every answer
+        that arrives (so it does not have to travel in the snapshot), then
+        restores ``t``.  Returns True when the ring fully quiesced —
+        anything left is either lost (lossy teacher) or must be re-asked
+        by the restore (``engine.snapshot``)."""
+        t0 = self.t
+        try:
+            self.drain_replies(max_ticks=max_ticks, idle_sleep_s=idle_sleep_s)
+        finally:
+            self.t = t0
+        return not len(self.ring)
+
     def _poll_and_apply(self) -> list[TeacherReply]:
         replies = self.teacher.poll(self.t)
         for reply in replies:
@@ -674,13 +752,47 @@ class StreamSession:
             )
         return self.state, outs, self.stats
 
+    # -- durability (engine/snapshot.py) -----------------------------------
+
+    def snapshot(self) -> dict:
+        """Full-fidelity serialization of this session: EngineState, ring
+        contents with their plan-time context, backpressure-policy state
+        (deferred asks; coalesce coverage is the ring masks), stats, the
+        in-flight tick, the tick-source cursor, and — when the teacher
+        supports it — the teacher's own state.  The returned tree is numpy
+        leaves + one JSON meta leaf: hand it to
+        ``runtime.checkpoint.CheckpointManager.save`` for atomic keep-k
+        publication.  The session keeps running."""
+        from repro.engine import snapshot as snapshot_mod
+
+        return snapshot_mod.capture(self)
+
+    @classmethod
+    def restore(
+        cls,
+        tree: dict,
+        teacher: Teacher,
+        cfg=None,
+        ship: Optional[Callable] = None,
+        pending: str = "auto",
+    ) -> "StreamSession":
+        """Rebuild a session from ``snapshot()``'s tree (see
+        ``engine.snapshot.restore`` for the pending-ticket policies).  The
+        caller repositions the tick source at
+        ``engine.snapshot.ticks_consumed(tree)`` and resumes driving
+        ``advance``; under a deterministic snapshot-capable teacher the
+        resumed run is bit-for-bit the uninterrupted one."""
+        from repro.engine import snapshot as snapshot_mod
+
+        return snapshot_mod.restore(tree, teacher, cfg=cfg, ship=ship, pending=pending)
+
     # -- internals ---------------------------------------------------------
 
     def _ask(self, x, queried: np.ndarray, p, t: int):
         """One actual teacher.ask + ring push (evicting oldest, metered)."""
         ticket = self.teacher.ask(x, queried, t)
         self.stats.tickets_issued += 1
-        dropped = self.ring.push(ticket, PendingTicket(t, queried, p))
+        dropped = self.ring.push(ticket, PendingTicket(t, queried, p, x))
         if dropped is not None:
             self.stats.tickets_dropped += 1
             self.stats.queries_dropped += int(dropped.queried.sum())

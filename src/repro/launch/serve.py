@@ -17,11 +17,29 @@ delayed reply is judged by the prediction/threshold the query was issued
 under.
 
 ``--teacher rpc`` swaps the in-process latency model for a real loopback
-TCP label server (``repro.engine.rpc``), with wall-clock timeout → loss.
+TCP label server (``repro.engine.rpc``), with wall-clock timeout → loss;
+``--teacher-secret`` arms the HMAC challenge–response handshake on both
+ends (an unauthenticated label server is refused).
+
+``--sched drr`` replaces the fixed quantum-tick round robin with deficit
+round robin in stream-step units, so a huge tenant cannot starve small
+ones.
+
+Durable sessions (``repro.engine.snapshot``): ``--snapshot-dir`` +
+``--snapshot-every`` publish per-tenant session snapshots atomically
+(keep-k) as the decode loop runs; ``--resume`` restores every tenant from
+its latest published snapshot (replaying the backbone decode up to the
+recorded tick cursor) — kill the process mid-serve and it continues where
+it stopped.  ``--migrate`` demonstrates live tenant migration: tenant0 is
+quiesced mid-stream, snapshotted, extracted from the running multiplexer,
+and restored into a second multiplexer with a *fresh* teacher connection
+(in-flight tickets re-asked and metered) — the query-accounting identity
+must still reconcile, and the report proves it.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tokens 32 \
-      --tenants 2 --backpressure coalesce --teacher-latency 2
+      --tenants 2 --backpressure coalesce --teacher-latency 2 \
+      --snapshot-dir /tmp/serve_ckpt --snapshot-every 8
 """
 
 from __future__ import annotations
@@ -35,7 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs, engine
-from repro.engine import multiplex, rpc, stream
+from repro.engine import multiplex, rpc, snapshot, stream
 from repro.models import model as model_lib
 
 
@@ -55,7 +73,10 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
           teacher_latency: int = 1, teacher_jitter: int = 0,
           teacher_loss: float = 0.0, pending_capacity: int = 8,
           tenants: int = 1, backpressure: str = "drop_oldest",
-          teacher: str = "latency", rpc_timeout_s: float = 5.0):
+          teacher: str = "latency", rpc_timeout_s: float = 5.0,
+          teacher_secret: str = None, sched: str = "rr",
+          snapshot_dir: str = None, snapshot_every: int = 0,
+          resume: bool = False, migrate: bool = False):
     cfg = configs.get_config(arch, variant)
     key = jax.random.PRNGKey(seed)
     params = model_lib.layers.init_params(model_lib.build_schema(cfg), key)
@@ -66,40 +87,60 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
     )(params, prompts)
 
     odl_cfg = model_lib.core_config(cfg)
+    durable = snapshot_dir is not None
     # One backbone decode feeds every tenant: tee the tick source N ways
-    # (the round-robin scheduler keeps tenants within one time slice of
-    # each other, so the tee buffer stays bounded by the quantum).
-    feeds = itertools.tee(
+    # (the scheduler keeps tenants within one time slice of each other, so
+    # the tee buffer stays bounded by the quantum).
+    shared = itertools.tee(
         _decode_feats(params, state, prompts, cfg, gen_tokens), tenants
     )
+    if durable:
+        # Durability additionally needs a *seekable* source per tenant: the
+        # live path keeps sharing the one tee'd decode (cursor 0), and only
+        # an actual resume (cursor k > 0) pays for a fresh decode replayed
+        # to the snapshot's tick cursor — the backbone is deterministic.
+        # (Caveat: a tenant that resumes leaves its tee branch unconsumed,
+        # pinning the tee buffer for this run — fine at serve scale, and
+        # only on runs that actually resumed.)
+        def make_feed(branch):
+            def factory(start, branch=branch):
+                if start == 0:
+                    return branch
+                return itertools.islice(
+                    _decode_feats(params, state, prompts, cfg, gen_tokens),
+                    start, None,
+                )
+            return snapshot.ResumableTicks(factory)
+
+        feeds = [make_feed(b) for b in shared]
+    else:
+        feeds = shared
 
     with contextlib.ExitStack() as stack:
-        if teacher == "rpc":
-            host, port = stack.enter_context(
-                rpc.loopback_server(n_out=cfg.odl.n_out)
-            )
-            teachers = [
-                stack.enter_context(
-                    rpc.RpcTeacher(host, port, timeout_s=rpc_timeout_s)
+        def make_teacher(i):
+            if teacher == "rpc":
+                return stack.enter_context(
+                    rpc.RpcTeacher(host, port, timeout_s=rpc_timeout_s,
+                                   secret=teacher_secret)
                 )
-                for _ in range(tenants)
-            ]
-        else:
             # The smoke teacher predicts random classes (a real deployment
             # points label_fn at the pod-side backbone ensemble);
             # latency/jitter/loss model the BLE/network round-trip in
             # decode ticks, per tenant.
-            def make_label_fn(i):
-                rng = np.random.default_rng(seed + i)
-                return lambda tick, feats: rng.integers(0, cfg.odl.n_out, size=batch)
+            rng = np.random.default_rng(seed + i)
+            return stream.LatencyTeacher(
+                label_fn=lambda tick, feats: rng.integers(
+                    0, cfg.odl.n_out, size=batch
+                ),
+                latency=teacher_latency, jitter=teacher_jitter,
+                loss_prob=teacher_loss, seed=seed + i,
+            )
 
-            teachers = [
-                stream.LatencyTeacher(
-                    label_fn=make_label_fn(i), latency=teacher_latency,
-                    jitter=teacher_jitter, loss_prob=teacher_loss, seed=seed + i,
-                )
-                for i in range(tenants)
-            ]
+        if teacher == "rpc":
+            host, port = stack.enter_context(
+                rpc.loopback_server(n_out=cfg.odl.n_out, secret=teacher_secret)
+            )
+        teachers = {f"tenant{i}": make_teacher(i) for i in range(tenants)}
 
         tenant_list = [
             multiplex.Tenant(
@@ -107,7 +148,7 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
                 state=engine.init_fleet(odl_cfg, batch),
                 ticks=feeds[i],
                 cfg=odl_cfg,
-                teacher=teachers[i],
+                teacher=teachers[f"tenant{i}"],
                 mode="serve",  # gate semantics: live drift detector,
                 # condition-2 forced queries, controller always armed
                 capacity=pending_capacity,
@@ -116,7 +157,59 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
             )
             for i in range(tenants)
         ]
-        results, agg = multiplex.run(tenant_list)
+        if resume and snapshot_dir is None:
+            raise ValueError("--resume needs --snapshot-dir (nothing to "
+                             "restore from otherwise)")
+        mux = multiplex.Multiplexer(
+            tenant_list, sched=sched, snapshot_dir=snapshot_dir,
+            snapshot_every=snapshot_every, resume=resume,
+            # Migration wants to stop mid-stream: schedule tick by tick so
+            # the threshold check below lands before the stream drains.
+            quantum=1 if migrate else multiplex.DEFAULT_QUANTUM,
+        )
+        if migrate:
+            # Live migration demo: run until tenant0 is mid-stream, quiesce
+            # + snapshot + extract it, restore it into a second multiplexer
+            # behind a FRESH teacher (a migration lands on a new host: the
+            # old socket/object is gone), finish both, merge the reports.
+            while mux.round():
+                if mux.session("tenant0").t >= max(2, gen_tokens // 2):
+                    break
+            if mux.finished("tenant0"):
+                # Too few tokens for a mid-stream cut: nothing to migrate.
+                print("tenant0 finished before the migration point "
+                      "(--tokens too small); serving without migration")
+                migrate = False
+        if migrate:
+            tree, rest_ticks = mux.extract("tenant0")
+            results, agg = mux.run()  # finish the remaining tenants
+            fresh = make_teacher(0)
+            teachers["tenant0"] = fresh
+            # pending="reask": the destination teacher is a new connection
+            # on a (conceptually) new host — never restore the old teacher's
+            # state into it, re-ask whatever is still in flight.
+            mux_b = multiplex.Multiplexer([], sched=sched, pending="reask")
+            mux_b.admit(
+                multiplex.Tenant(
+                    name="tenant0", state=None, ticks=rest_ticks, cfg=odl_cfg,
+                    teacher=fresh, mode="serve", capacity=pending_capacity,
+                    backpressure=backpressure, collect=False,
+                ),
+                snapshot=tree,
+                positioned=True,  # rest_ticks is extract()'s live iterator
+            )
+            results_b, agg_b = mux_b.run()
+            migrated = results_b["tenant0"]
+            print(f"tenant0 migrated at tick {snapshot.ticks_consumed(tree)} "
+                  f"(re-asked {migrated.stats.tickets_reasked} in-flight "
+                  f"tickets through the fresh teacher)")
+            results = {**results, "tenant0": migrated}
+            agg.stream_steps += agg_b.stream_steps
+            agg.ticks += agg_b.ticks
+            agg.wall_s += agg_b.wall_s
+            agg.n_tenants = tenants
+        else:
+            results, agg = mux.run()
 
     queries = skips = 0
     for name in sorted(results):
@@ -131,10 +224,10 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
               f"({100 * s.queries_issued / max(s.stream_steps, 1):.1f}% comm volume), "
               f"labels {s.labels_applied}, dropped {s.queries_dropped}, "
               f"lost {s.queries_lost}, coalesced {s.queries_coalesced}, "
-              f"orphaned {s.replies_orphaned}, accounting {recon}, "
-              f"{meter_kb:.1f} kB metered")
+              f"orphaned {s.replies_orphaned}, reasked {s.tickets_reasked}, "
+              f"accounting {recon}, {meter_kb:.1f} kB metered")
         rpc_note = (
-            f"; rpc timeouts {teachers[int(name.removeprefix('tenant'))].timed_out}"
+            f"; rpc timeouts {teachers[name].timed_out}"
             if teacher == "rpc" else ""
         )
         print(f"  tick p50/p95 {s.tick_p50_ms:.2f}/{s.tick_p95_ms:.2f} ms; "
@@ -144,10 +237,13 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
             raise AssertionError(f"{name}: query accounting does not reconcile: "
                                  f"{s.summary()}")
     caches = stream.cache_stats()["plan_runner"]
+    extras = f", sched={sched}"
+    if durable:
+        extras += f", snapshots under {snapshot_dir} every {snapshot_every} ticks"
     print(f"aggregate: {tenants} tenant(s) x {gen_tokens} tokens x {batch} streams "
           f"= {agg.stream_steps} steps in {agg.wall_s:.2f}s "
           f"({agg.steps_per_s:,.0f} steps/s); backpressure={backpressure}, "
-          f"teacher={teacher}; plan-runner cache "
+          f"teacher={teacher}{extras}; plan-runner cache "
           f"{caches['hits']} hits / {caches['misses']} misses "
           f"(tenants share executables)")
     return queries, skips
@@ -164,6 +260,9 @@ def main(argv=None):
     ap.add_argument("--backpressure", default="drop_oldest",
                     choices=stream.BACKPRESSURE_POLICIES,
                     help="pending-ring saturation policy (per tenant)")
+    ap.add_argument("--sched", default="rr", choices=multiplex.SCHEDULERS,
+                    help="rr: fixed quantum-tick round robin; drr: deficit "
+                    "round robin in stream-step units (size-fair)")
     ap.add_argument("--teacher", default="latency", choices=("latency", "rpc"),
                     help="latency: in-process tick-granular model; "
                     "rpc: loopback TCP label server with timeout->loss")
@@ -173,16 +272,34 @@ def main(argv=None):
                     help="extra uniform per-ticket latency in [0, J] ticks")
     ap.add_argument("--teacher-loss", type=float, default=0.0,
                     help="fraction of tickets silently lost by the teacher")
+    ap.add_argument("--teacher-secret", default=None,
+                    help="shared secret: HMAC-authenticate the rpc teacher "
+                    "connection (both ends)")
     ap.add_argument("--rpc-timeout", type=float, default=5.0,
                     help="rpc teacher reply deadline in wall seconds")
     ap.add_argument("--pending-capacity", type=int, default=8,
                     help="in-flight query ring capacity (see --backpressure)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="publish per-tenant session snapshots here "
+                    "(atomic, keep-k) — enables --resume")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot cadence in decode ticks (0: only explicit)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore every tenant from its latest published "
+                    "snapshot under --snapshot-dir")
+    ap.add_argument("--migrate", action="store_true",
+                    help="demo: quiesce+snapshot tenant0 mid-stream and "
+                    "restore it into a second multiplexer behind a fresh "
+                    "teacher connection")
     args = ap.parse_args(argv)
     serve(args.arch, args.variant, batch=args.batch, gen_tokens=args.tokens,
           teacher_latency=args.teacher_latency, teacher_jitter=args.teacher_jitter,
           teacher_loss=args.teacher_loss, pending_capacity=args.pending_capacity,
           tenants=args.tenants, backpressure=args.backpressure,
-          teacher=args.teacher, rpc_timeout_s=args.rpc_timeout)
+          teacher=args.teacher, rpc_timeout_s=args.rpc_timeout,
+          teacher_secret=args.teacher_secret, sched=args.sched,
+          snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
+          resume=args.resume, migrate=args.migrate)
 
 
 if __name__ == "__main__":

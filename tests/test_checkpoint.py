@@ -57,6 +57,60 @@ def test_partial_checkpoint_is_ignored(tmp_path):
     assert step == 1
 
 
+def test_crashed_tmp_with_full_contents_is_skipped(tmp_path):
+    """A kill landing between the last leaf write and the atomic rename
+    leaves a *complete-looking* .tmp (MANIFEST included).  latest_step must
+    still fall back to the previous published step, and a later successful
+    save of the same step must replace the stale staging dir."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(3, _tree(3.0))
+    # Stage step 4 fully, crash before rename: copy a real checkpoint's
+    # contents into the .tmp so only the missing rename distinguishes it.
+    mgr.save(4, _tree(4.0))
+    os.rename(tmp_path / "step_000000004", tmp_path / "step_000000004.tmp")
+    assert mgr.all_steps() == [3]
+    assert mgr.latest_step() == 3
+    step, tree = mgr.restore()
+    assert step == 3
+    np.testing.assert_allclose(tree["params"]["w"], 3.0)
+    # The retried save wins and clears the stale staging dir.
+    mgr.save(4, _tree(4.5))
+    assert mgr.latest_step() == 4
+    assert not (tmp_path / "step_000000004.tmp").exists()
+    np.testing.assert_allclose(mgr.restore()[1]["params"]["w"], 4.5)
+
+
+def test_keep_k_gc_ignores_crashed_tmp_and_restores_explicit_step(tmp_path):
+    """GC counts only *published* steps — a crashed .tmp neither consumes a
+    keep slot nor gets resurrected — and restore(step=) still reaches any
+    surviving published step, not just the latest."""
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2):
+        mgr.save(s, _tree(float(s)))
+    os.makedirs(tmp_path / "step_000000099.tmp")  # crashed write, never published
+    mgr.save(3, _tree(3.0))  # triggers GC
+    assert mgr.all_steps() == [2, 3]
+    assert not (tmp_path / "step_000000001").exists()
+    assert (tmp_path / "step_000000099.tmp").exists()  # GC leaves staging alone
+    step, tree = mgr.restore(step=2)
+    assert step == 2
+    np.testing.assert_allclose(tree["params"]["w"], 2.0)
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(str(tmp_path / "empty")).restore()
+
+
+def test_save_async_overlapping_saves_serialize(tmp_path):
+    """save_async waits out the previous write before snapshotting the next
+    tree: back-to-back async saves must all publish, in order."""
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    for s in range(5):
+        mgr.save_async(s, _tree(float(s)))
+    mgr.wait()
+    assert mgr.all_steps() == [0, 1, 2, 3, 4]
+    for s in (0, 4):
+        np.testing.assert_allclose(mgr.restore(step=s)[1]["params"]["w"], float(s))
+
+
 def test_nan_guard_rolls_back(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=3)
     mgr.save(10, _tree(1.0))

@@ -410,12 +410,11 @@ def test_delayed_reply_judged_at_plan_time_context_matches_run_fleet():
     np.testing.assert_array_equal(
         np.asarray(st_new.prune.level) - base, ref_delta
     )
-    # Deprecated recompute path: judged against the *current* weights the
-    # prediction now agrees, so the stale judgment misses the step-up — the
-    # bug this test locks out.
-    with pytest.deprecated_call():
-        st_old = engine.apply_labels(st, ctx0.feats, labels0, mask, cfg)
-    np.testing.assert_array_equal(np.asarray(st_old.prune.level), base)
+    # The recompute path (judge against the *current* weights, where the
+    # prediction now agrees and the stale judgment would miss the step-up)
+    # is gone for good: raw features are rejected outright.
+    with pytest.raises(TypeError, match="plan-time"):
+        engine.apply_labels(st, ctx0.feats, labels0, mask, cfg)
     # And the fixed path trains on the plan-time activations of x0.
     assert float(jnp.max(jnp.abs(st_new.elm.beta - st.elm.beta))) > 0
 
@@ -550,3 +549,169 @@ def test_multiplex_rejects_duplicate_names_and_empty():
     )
     with pytest.raises(ValueError, match="unique"):
         multiplex.run([t, t])
+
+
+# ---------------------------------------------------------------------------
+# Deficit round robin (ISSUE 4 satellite): size-fair scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_drr_is_bit_for_bit_and_does_not_let_big_tenants_starve_small():
+    """DRR charges a tick its stream count: a big tenant advances ~1 tick
+    per round while a small one keeps its full quantum — many more scheduler
+    rounds than rr's fixed quantum-tick slices (the observable fairness
+    property) — and per-tenant results stay bit-for-bit identical to rr
+    (scheduling order can never change results)."""
+    cfg_small, cfg_big = _cfg(n_hidden=16, min_trained=4), _cfg(n_hidden=16, min_trained=4)
+    t_len = 24
+    xs_s, ys_s = _stream_data(cfg_small, t_len, 2, seed=30)
+    xs_b, ys_b = _stream_data(cfg_big, t_len, 16, seed=31)
+
+    def tenants():
+        return [
+            multiplex.Tenant(
+                name="small", state=engine.init_fleet(cfg_small, 2),
+                ticks=(x for x in xs_s), cfg=cfg_small,
+                teacher=stream.LatencyTeacher(stream.array_labels(ys_s), latency=0),
+                mode="train_phase",
+            ),
+            multiplex.Tenant(
+                name="big", state=engine.init_fleet(cfg_big, 16),
+                ticks=(x for x in xs_b), cfg=cfg_big,
+                teacher=stream.LatencyTeacher(stream.array_labels(ys_b), latency=0),
+                mode="train_phase",
+            ),
+        ]
+
+    res_rr, agg_rr = multiplex.run(tenants(), sched="rr")
+
+    # Drive drr round by round and watch the big tenant's per-round tick
+    # budget while the small tenant is still live.
+    mux = multiplex.Multiplexer(tenants(), sched="drr")
+    big_while_small_live = []
+    while mux.round():
+        if mux._slot("small").result is None:
+            big_while_small_live.append(mux._slot("big").last_ticks)
+    res_drr, agg_drr = mux.results()
+
+    for name in ("small", "big"):
+        _assert_state_equal(res_rr[name].state, res_drr[name].state, msg=name)
+        for field in res_rr[name].outputs._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res_rr[name].outputs, field)),
+                np.asarray(getattr(res_drr[name].outputs, field)),
+                err_msg=f"{name} output {field!r} diverged under drr",
+            )
+        _assert_reconciled(res_drr[name].stats)
+    assert agg_drr.stream_steps == agg_rr.stream_steps
+    # rr would give the big tenant its full 8-tick slice every round,
+    # blocking the small tenant for 8 heavy (8x-S) ticks at a time.  drr's
+    # per-round credit is quantum * S_small = one big tick (+carry): while
+    # the small tenant is live, the big one never hogs the device — and
+    # once the small tenant finishes, drr is work-conserving (the credit
+    # recomputes over live tenants, so the big one speeds back up).
+    assert big_while_small_live, "small tenant never observed live"
+    assert max(big_while_small_live) <= 2, big_while_small_live
+    assert agg_drr.rounds >= agg_rr.rounds
+
+
+def test_scheduler_is_validated():
+    cfg = _cfg()
+    t = multiplex.Tenant(
+        name="t", state=engine.init_fleet(cfg, 2), ticks=iter(()), cfg=cfg,
+        teacher=stream.LatencyTeacher(lambda t_, f: np.zeros(2, np.int32)),
+    )
+    with pytest.raises(ValueError, match="scheduler"):
+        multiplex.run([t], sched="fifo")
+
+
+# ---------------------------------------------------------------------------
+# RPC teacher auth (ISSUE 4 satellite): HMAC challenge-response on connect
+# ---------------------------------------------------------------------------
+
+
+def test_rpc_auth_roundtrip_and_rejection():
+    """A client with the right secret round-trips labels; the wrong secret
+    (or none) gets the connection closed before any label — the asks map to
+    timeout->loss and the fleet never trains on an unauthenticated server."""
+    cfg = _cfg(min_trained=1_000_000)
+    t_len, s_len = 4, 2
+    xs, _ = _stream_data(cfg, t_len, s_len, seed=32)
+    server = rpc.LabelServer(n_out=cfg.elm.n_out, secret="paper-s3cret").start()
+    try:
+        with rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=30.0,
+                            secret="paper-s3cret") as teacher:
+            st, outs, stats = stream.run(
+                engine.init_fleet(cfg, s_len), (x for x in xs), cfg, teacher,
+                mode="train_phase",
+            )
+        assert stats.labels_applied == stats.queries_issued == t_len * s_len
+        assert outs.trained.all()
+        _assert_reconciled(stats)
+
+        # Wrong secret: the server rejects the digest and closes without
+        # proving itself, so the client fails fast at connect.
+        with pytest.raises(ConnectionError):
+            rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=0.3,
+                           secret="wrong")
+        # No secret at all: the client skips the handshake, the server
+        # closes the unauthenticated connection, and every ask maps to
+        # timeout->loss — the fleet never trains.
+        with rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=0.3,
+                            secret=None) as teacher:
+            st, outs, stats = stream.run(
+                engine.init_fleet(cfg, s_len), (x for x in xs), cfg,
+                teacher, mode="train_phase",
+            )
+        assert stats.labels_applied == 0
+        assert stats.queries_lost == stats.queries_issued == t_len * s_len
+        assert int(np.asarray(st.elm.count).sum()) == 0
+        _assert_reconciled(stats)
+        assert server.auth_failures >= 2
+    finally:
+        server.close()
+
+
+def test_rpc_client_refuses_unauthenticated_server():
+    """A client configured with a secret must refuse a server that opens
+    with no challenge (it is not speaking the authenticated protocol)."""
+    server = rpc.LabelServer(n_out=4).start()  # no secret on the server
+    try:
+        with pytest.raises((ConnectionError, OSError)):
+            rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=1.0,
+                           connect_timeout_s=0.5, secret="expects-auth")
+    finally:
+        server.close()
+
+
+def test_rpc_client_refuses_imposter_server():
+    """Auth is mutual: a rogue endpoint that emits a challenge (to fish for
+    the client's digest) but cannot answer the client's nonce must be
+    refused before any of its labels can train the fleet."""
+    import json as json_mod
+    import socket
+    import threading
+
+    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    sock.bind(("127.0.0.1", 0))
+    sock.listen(1)
+    port = sock.getsockname()[1]
+
+    def imposter():
+        conn, _ = sock.accept()
+        with conn, conn.makefile("rwb") as f:
+            f.write(b'{"challenge": "00"}\n')
+            f.flush()
+            f.readline()  # harvest the client's digest...
+            # ...but answer the client's nonce with garbage (no secret).
+            f.write((json_mod.dumps({"auth_ok": "deadbeef"}) + "\n").encode())
+            f.flush()
+
+    t = threading.Thread(target=imposter, daemon=True)
+    t.start()
+    try:
+        with pytest.raises(ConnectionError, match="prove knowledge"):
+            rpc.RpcTeacher("127.0.0.1", port, timeout_s=1.0,
+                           connect_timeout_s=2.0, secret="the-real-secret")
+    finally:
+        sock.close()
