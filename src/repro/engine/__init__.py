@@ -95,7 +95,12 @@ traffic).  Query accounting reconciles exactly: ``queries_issued ==
 labels_applied + queries_dropped + queries_lost (+ queries_coalesced)``.
 ``engine.rpc.RpcTeacher`` speaks the same Teacher protocol over a real TCP
 socket with timeout→loss mapping, so the latency model is no longer the
-only teacher transport.
+only teacher transport; ``engine.rpc.BatchedRpcClient`` shares **one**
+such connection across all tenants of a teacher host, coalescing asks
+that land within a flush window into single length-prefixed binary
+frames (v2 wire format; v1 newline-JSON stays supported) and demuxing
+replies to per-tenant ``BatchedRpcTeacher`` handles —
+``multiplex.shared_rpc_teachers`` dedups endpoints into shared clients.
 
 Serving entry points (``gate`` / ``apply_labels``) remain for callers that
 carry their own features (``models/model.py``'s decode loop feeds backbone

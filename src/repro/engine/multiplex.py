@@ -56,6 +56,14 @@ Usage::
                          backpressure="coalesce"),
     ], sched="drr", snapshot_dir="/var/ckpt", snapshot_every=1000)
 
+Teacher transport: ``shared_rpc_teachers`` builds per-tenant
+``stream.Teacher`` handles over **shared** batched RPC connections —
+tenants with the same ``(host, port)`` endpoint ride one
+``rpc.BatchedRpcClient`` (one socket, one HMAC handshake per connection,
+asks from all its tenants coalesced into single binary frames within the
+flush window), so N tenants cost one round-trip stream per teacher host
+instead of N.
+
 ``launch/serve.py`` drives this with ``--tenants`` / ``--backpressure`` /
 ``--sched`` / ``--snapshot-dir`` / ``--resume`` / ``--migrate``;
 ``benchmarks/multiplex_bench.py`` measures aggregate throughput and
@@ -102,6 +110,54 @@ class Tenant:
     backpressure: str = "drop_oldest"
     collect: bool = True
     donate: Optional[bool] = None
+
+
+def shared_rpc_teachers(
+    endpoints,
+    timeout_s: float = 5.0,
+    connect_timeout_s: float = 5.0,
+    secret: Optional[str] = None,
+    batch_window_s: Optional[float] = None,
+    batch_max: Optional[int] = None,
+):
+    """Per-tenant teachers over shared batched RPC connections.
+
+    ``endpoints[i]`` is tenant i's ``(host, port)``; tenants with the same
+    endpoint share **one** ``rpc.BatchedRpcClient`` — one socket per
+    teacher host, one HMAC handshake per connection (not per tenant), and
+    every tenant's asks coalesced into batched frames within the flush
+    window.  Returns ``(teachers, clients)``: ``teachers[i]`` is tenant
+    i's ``stream.Teacher`` handle, ``clients`` the deduplicated
+    connections (close them — not the handles — when the run is done).
+    """
+    from repro.engine import rpc  # deferred: keep `python -m repro.engine.rpc` clean
+
+    if batch_window_s is None:
+        batch_window_s = rpc.DEFAULT_BATCH_WINDOW_S
+    if batch_max is None:
+        batch_max = rpc.DEFAULT_BATCH_MAX
+    clients: dict = {}
+    teachers = []
+    try:
+        for i, (host, port) in enumerate(endpoints):
+            key = (host, int(port))
+            client = clients.get(key)
+            if client is None:
+                client = clients[key] = rpc.BatchedRpcClient(
+                    host, int(port), timeout_s=timeout_s,
+                    connect_timeout_s=connect_timeout_s, secret=secret,
+                    batch_window_s=batch_window_s, batch_max=batch_max,
+                )
+            teachers.append(client.tenant(name=f"tenant{i}"))
+    except BaseException:
+        # A later endpoint's dial/handshake failed: the clients already
+        # built (sockets + reader/flusher threads) would otherwise leak
+        # for the life of the process.
+        for client in clients.values():
+            with contextlib.suppress(Exception):
+                client.close()
+        raise
+    return teachers, list(clients.values())
 
 
 class TenantResult(NamedTuple):

@@ -17,9 +17,15 @@ delayed reply is judged by the prediction/threshold the query was issued
 under.
 
 ``--teacher rpc`` swaps the in-process latency model for a real loopback
-TCP label server (``repro.engine.rpc``), with wall-clock timeout → loss;
-``--teacher-secret`` arms the HMAC challenge–response handshake on both
-ends (an unauthenticated label server is refused).
+TCP label server (``repro.engine.rpc``), with wall-clock timeout → loss.
+All tenants share **one** batched connection per teacher host
+(``rpc.BatchedRpcClient``): asks landing within
+``--teacher-batch-window`` ms (up to ``--teacher-batch-max``) coalesce
+into a single length-prefixed binary frame, amortizing the per-query
+round-trip the paper's pruning argument is about.  ``--teacher-secret``
+arms the HMAC challenge–response handshake on both ends (an
+unauthenticated label server is refused) — once per connection, not once
+per tenant.
 
 ``--sched drr`` replaces the fixed quantum-tick round robin with deficit
 round robin in stream-step units, so a huge tenant cannot starve small
@@ -74,6 +80,8 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
           teacher_loss: float = 0.0, pending_capacity: int = 8,
           tenants: int = 1, backpressure: str = "drop_oldest",
           teacher: str = "latency", rpc_timeout_s: float = 5.0,
+          teacher_batch_window_s: float = rpc.DEFAULT_BATCH_WINDOW_S,
+          teacher_batch_max: int = rpc.DEFAULT_BATCH_MAX,
           teacher_secret: str = None, sched: str = "rr",
           snapshot_dir: str = None, snapshot_every: int = 0,
           resume: bool = False, migrate: bool = False):
@@ -119,10 +127,16 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
     with contextlib.ExitStack() as stack:
         def make_teacher(i):
             if teacher == "rpc":
-                return stack.enter_context(
-                    rpc.RpcTeacher(host, port, timeout_s=rpc_timeout_s,
-                                   secret=teacher_secret)
+                # Only the migration path lands here: a migrated tenant is
+                # conceptually on a new host, so it gets a FRESH shared
+                # connection (own handshake), not a handle on the old one.
+                client = rpc.BatchedRpcClient(
+                    host, port, timeout_s=rpc_timeout_s, secret=teacher_secret,
+                    batch_window_s=teacher_batch_window_s,
+                    batch_max=teacher_batch_max,
                 )
+                stack.callback(client.close)
+                return client.tenant(name=f"tenant{i}")
             # The smoke teacher predicts random classes (a real deployment
             # points label_fn at the pod-side backbone ensemble);
             # latency/jitter/loss model the BLE/network round-trip in
@@ -140,7 +154,19 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
             host, port = stack.enter_context(
                 rpc.loopback_server(n_out=cfg.odl.n_out, secret=teacher_secret)
             )
-        teachers = {f"tenant{i}": make_teacher(i) for i in range(tenants)}
+            # Default transport: every tenant with the same endpoint shares
+            # one batched connection — one socket, one HMAC handshake, asks
+            # coalesced into single frames within the flush window.
+            rpc_teachers, rpc_clients = multiplex.shared_rpc_teachers(
+                [(host, port)] * tenants, timeout_s=rpc_timeout_s,
+                secret=teacher_secret, batch_window_s=teacher_batch_window_s,
+                batch_max=teacher_batch_max,
+            )
+            for client in rpc_clients:
+                stack.callback(client.close)
+            teachers = {f"tenant{i}": t for i, t in enumerate(rpc_teachers)}
+        else:
+            teachers = {f"tenant{i}": make_teacher(i) for i in range(tenants)}
 
         tenant_list = [
             multiplex.Tenant(
@@ -277,6 +303,14 @@ def main(argv=None):
                     "connection (both ends)")
     ap.add_argument("--rpc-timeout", type=float, default=5.0,
                     help="rpc teacher reply deadline in wall seconds")
+    ap.add_argument("--teacher-batch-window", type=float,
+                    default=rpc.DEFAULT_BATCH_WINDOW_S * 1e3,
+                    help="rpc ask-coalescing flush window in ms (asks from "
+                    "all tenants landing within it ride one frame; 0 sends "
+                    "one frame per ask)")
+    ap.add_argument("--teacher-batch-max", type=int,
+                    default=rpc.DEFAULT_BATCH_MAX,
+                    help="max asks coalesced into one rpc frame")
     ap.add_argument("--pending-capacity", type=int, default=8,
                     help="in-flight query ring capacity (see --backpressure)")
     ap.add_argument("--snapshot-dir", default=None,
@@ -297,6 +331,8 @@ def main(argv=None):
           teacher_loss=args.teacher_loss, pending_capacity=args.pending_capacity,
           tenants=args.tenants, backpressure=args.backpressure,
           teacher=args.teacher, rpc_timeout_s=args.rpc_timeout,
+          teacher_batch_window_s=args.teacher_batch_window / 1e3,
+          teacher_batch_max=args.teacher_batch_max,
           teacher_secret=args.teacher_secret, sched=args.sched,
           snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
           resume=args.resume, migrate=args.migrate)

@@ -1,0 +1,523 @@
+"""Batched binary RPC teacher transport — ISSUE 5.
+
+Covers the v2 length-prefixed framing codec, v1↔v2 wire interop, the
+shared-connection ``BatchedRpcClient`` (batched-vs-solo bit-for-bit
+parity, cross-tenant demux, accounting under loss/jitter/timeout), and
+the transport bugfixes: the label server's bounded thread list, the
+write lock (concurrent asks never tear a frame), and dead-connection
+marking after a mid-frame write failure.
+"""
+
+import socket
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import drift as drift_mod
+from repro.core import oselm, pruning
+from repro.engine import multiplex, rpc, stream
+
+
+def _cfg(n_in=24, n_hidden=16, n_out=4, min_trained=16):
+    return engine.EngineConfig(
+        elm=oselm.OSELMConfig(
+            n_in=n_in, n_hidden=n_hidden, n_out=n_out, variant="hash", ridge=1e-2
+        ),
+        prune=pruning.PruneConfig(min_trained=min_trained),
+        drift=drift_mod.DriftConfig(warmup=16, k_sigma=3.0, enter_hits=2, exit_calm=16),
+    )
+
+
+def _stream_data(cfg, t, s, seed=0):
+    kx = jax.random.PRNGKey(seed)
+    return np.array(jnp.tanh(jax.random.normal(kx, (t, s, cfg.elm.n_in))))
+
+
+def _assert_state_equal(a, b, msg=""):
+    for (path, la), (_, lb) in zip(
+        jax.tree_util.tree_flatten_with_path(a)[0],
+        jax.tree_util.tree_flatten_with_path(b)[0],
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb), err_msg=f"{msg} leaf {path} diverged"
+        )
+
+
+def _assert_reconciled(stats):
+    assert stats.reconciled, stats.summary()
+
+
+class _SyncTeacher:
+    """Waits out each ask's reply before returning: collapses wall-clock
+    nondeterminism so two transports apply labels on identical ticks —
+    the labels themselves are deterministic (``expected_label``), so the
+    runs become bit-for-bit comparable."""
+
+    def __init__(self, inner, timeout=20.0):
+        self.inner = inner
+        self.timeout = timeout
+
+    def ask(self, feats, mask, tick):
+        ticket = self.inner.ask(feats, mask, tick)
+        deadline = time.monotonic() + self.timeout
+        while self.inner.in_flight() > 0 and time.monotonic() < deadline:
+            time.sleep(2e-4)
+        return ticket
+
+    def poll(self, tick):
+        return self.inner.poll(tick)
+
+    def in_flight(self):
+        return self.inner.in_flight()
+
+
+@pytest.fixture()
+def server():
+    srv = rpc.LabelServer(n_out=4).start()
+    yield srv
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# v2 framing codec
+# ---------------------------------------------------------------------------
+
+
+def test_codec_roundtrips_asks_and_replies():
+    rng = np.random.default_rng(0)
+    asks = [
+        (7, 3, np.array([True, False, True]), rng.normal(size=(3, 5)).astype(np.float32)),
+        (9, 4, np.ones(2, bool), rng.normal(size=(2, 8)).astype(np.float32)),
+    ]
+    frame = rpc.encode_asks(asks)
+    assert frame[0] == rpc.WIRE_V2
+    import io
+
+    got = list(rpc._iter_wire(io.BufferedReader(io.BytesIO(frame))))
+    assert len(got) == 1 and got[0][0] == "v2"
+    decoded = rpc.decode_asks(got[0][1], got[0][2])
+    assert len(decoded) == 2
+    for (t0, k0, m0, f0), (t1, k1, m1, f1) in zip(asks, decoded):
+        assert (t0, k0) == (t1, k1)
+        np.testing.assert_array_equal(np.asarray(m0, bool), m1)
+        np.testing.assert_array_equal(f0, f1)
+
+    replies = [
+        (7, np.array([True, False, True]), np.array([1, 0, 3], np.int32)),
+        (9, np.zeros(2, bool), np.zeros(2, np.int32)),
+    ]
+    back = rpc.decode_replies(*list(
+        rpc._iter_wire(io.BufferedReader(io.BytesIO(rpc.encode_replies(replies))))
+    )[0][1:])
+    assert [r.ticket for r in back] == [7, 9]
+    np.testing.assert_array_equal(back[0].labels, [1, 0, 3])
+    np.testing.assert_array_equal(back[0].answered, [True, False, True])
+    assert back[0].labels.dtype == np.int32 and back[0].answered.dtype == bool
+
+
+def test_non_object_frame_header_is_a_frame_error_not_a_crash(server):
+    """A v2 frame whose header is valid JSON but not an object (e.g. a
+    list) has no knowable payload length: the server must meter it as a
+    frame error and drop the connection — not crash the worker thread."""
+    frame = bytes([rpc.WIRE_V2]) + len(b"[1,2]").to_bytes(4, "little") + b"[1,2]"
+    conn = socket.create_connection(("127.0.0.1", server.port), timeout=5.0)
+    try:
+        conn.sendall(frame)
+        deadline = time.monotonic() + 5.0
+        while server.frame_errors == 0 and time.monotonic() < deadline:
+            time.sleep(5e-3)
+        assert server.frame_errors == 1
+        assert conn.recv(1) == b""  # server dropped the connection
+    finally:
+        conn.close()
+    # The server survives: a well-formed client still gets labels.
+    with rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=10.0) as teacher:
+        teacher.ask(np.zeros((2, 3), np.float32), np.ones(2, bool), tick=1)
+        assert _drain(teacher)
+
+
+def test_v1_and_v2_clients_interoperate_on_one_server(server):
+    """The upgraded server answers each request in its own wire format;
+    both clients get the same deterministic labels."""
+    feats = np.zeros((3, 4), np.float32)
+    mask = np.ones(3, bool)
+    want = [rpc.expected_label(5, s, server.n_out) for s in range(3)]
+    for wire in rpc.WIRE_FORMATS:
+        with rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=10.0,
+                            wire=wire) as teacher:
+            teacher.ask(feats, mask, tick=5)
+            replies = _drain(teacher)
+            assert replies and replies[0].labels.tolist() == want, wire
+            assert replies[0].answered.all()
+    assert server.requests_v1 == 1
+    assert server.frames_v2 == 1
+    assert server.frame_errors == 0
+
+
+def _drain(teacher, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    replies = []
+    while not replies and time.monotonic() < deadline:
+        replies = teacher.poll(0)
+        if not replies and teacher.in_flight() == 0:
+            replies = teacher.poll(0)
+            break
+        time.sleep(1e-3)
+    return replies
+
+
+# ---------------------------------------------------------------------------
+# Batched shared-connection client (tentpole)
+# ---------------------------------------------------------------------------
+
+
+def test_batched_client_coalesces_tenants_into_one_frame(server):
+    """Two tenants' asks inside the flush window ride ONE wire message;
+    the batched reply is demuxed back to the handle that asked."""
+    feats = np.zeros((2, 4), np.float32)
+    mask = np.ones(2, bool)
+    with rpc.BatchedRpcClient("127.0.0.1", server.port, timeout_s=10.0,
+                              batch_window_s=0.25) as client:
+        a = client.tenant("a")
+        b = client.tenant("b")
+        ta = a.ask(feats, mask, tick=1)
+        tb = b.ask(feats, mask, tick=2)
+        ra, rb = _drain(a), _drain(b)
+    assert client.wire_messages == 1 and client.asks_sent == 2
+    assert server.frames_v2 == 1 and server.asks_served == 2
+    # Demux: each handle sees exactly its own ticket, with the labels of
+    # the tick IT asked about.
+    assert [r.ticket for r in ra] == [ta]
+    assert [r.ticket for r in rb] == [tb]
+    assert ra[0].labels.tolist() == [rpc.expected_label(1, s, 4) for s in range(2)]
+    assert rb[0].labels.tolist() == [rpc.expected_label(2, s, 4) for s in range(2)]
+
+
+def test_batch_max_flushes_before_the_window(server):
+    feats = np.zeros((1, 2), np.float32)
+    mask = np.ones(1, bool)
+    with rpc.BatchedRpcClient("127.0.0.1", server.port, timeout_s=10.0,
+                              batch_window_s=30.0, batch_max=4) as client:
+        t = client.tenant()
+        for k in range(4):  # hits batch_max: flushes NOW, not in 30s
+            t.ask(feats, mask, tick=k)
+        replies = []
+        deadline = time.monotonic() + 10.0
+        while len(replies) < 4 and time.monotonic() < deadline:
+            replies += t.poll(0)
+            time.sleep(1e-3)
+    assert len(replies) == 4
+    assert client.wire_messages == 1 and client.asks_sent == 4
+
+
+def test_batched_vs_solo_parity_bit_for_bit(server):
+    """A tenant behind the shared batched transport reproduces its
+    per-tenant-connection ``RpcTeacher`` results bit-for-bit (labels are
+    deterministic; the sync wrapper pins the application schedule)."""
+    cfg = _cfg(min_trained=2)
+    t_len, s_len = 8, 3
+    xs = _stream_data(cfg, t_len, s_len, seed=21)
+
+    def run_with(teacher):
+        return stream.run(
+            engine.init_fleet(cfg, s_len), (x for x in xs), cfg,
+            _SyncTeacher(teacher), mode="train_phase",
+        )
+
+    with rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=20.0) as solo:
+        st_solo, outs_solo, stats_solo = run_with(solo)
+    with rpc.BatchedRpcClient("127.0.0.1", server.port, timeout_s=20.0,
+                              batch_window_s=1e-3) as client:
+        st_b, outs_b, stats_b = run_with(client.tenant())
+
+    _assert_state_equal(st_solo, st_b, msg="batched-vs-solo")
+    for name in outs_solo._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(outs_solo, name)), np.asarray(getattr(outs_b, name)),
+            err_msg=f"output {name!r} diverged",
+        )
+    assert stats_b.labels_applied == stats_solo.labels_applied == t_len * s_len
+    _assert_reconciled(stats_solo)
+    _assert_reconciled(stats_b)
+
+
+def test_multiplexed_tenants_on_shared_client_match_solo_runs(server):
+    """Two multiplexed tenants sharing ONE batched connection each
+    reproduce their solo per-tenant-connection run bit-for-bit — the
+    demux never leaks a label across tenants."""
+    cfg = _cfg(min_trained=2)
+    datas = [_stream_data(cfg, 8, 3, seed=31), _stream_data(cfg, 6, 3, seed=32)]
+
+    solo = []
+    for xs in datas:
+        with rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=20.0) as teacher:
+            solo.append(stream.run(
+                engine.init_fleet(cfg, xs.shape[1]), (x for x in xs), cfg,
+                _SyncTeacher(teacher), mode="train_phase",
+            ))
+
+    with rpc.BatchedRpcClient("127.0.0.1", server.port, timeout_s=20.0,
+                              batch_window_s=1e-3) as client:
+        tenants = [
+            multiplex.Tenant(
+                name=f"tenant{i}",
+                state=engine.init_fleet(cfg, xs.shape[1]),
+                ticks=(x for x in xs),
+                cfg=cfg,
+                teacher=_SyncTeacher(client.tenant(f"tenant{i}")),
+                mode="train_phase",
+            )
+            for i, xs in enumerate(datas)
+        ]
+        results, _ = multiplex.run(tenants)
+
+    for i, (st, outs, stats) in enumerate(solo):
+        r = results[f"tenant{i}"]
+        _assert_state_equal(st, r.state, msg=f"tenant{i}")
+        for name in outs._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(outs, name)), np.asarray(getattr(r.outputs, name)),
+                err_msg=f"tenant{i} output {name!r} diverged",
+            )
+        assert r.stats.labels_applied == stats.labels_applied > 0
+        _assert_reconciled(r.stats)
+
+
+def test_batched_accounting_reconciles_under_loss_jitter_timeout():
+    """Per-tenant query accounting holds exactly across batching when the
+    server loses asks out of batched frames, jitters replies, and the
+    client deadline converts silence to loss."""
+    server = rpc.LabelServer(n_out=4, loss_prob=0.3, jitter_s=2e-3, seed=7).start()
+    try:
+        cfg = _cfg(min_trained=1_000_000)
+        datas = [_stream_data(cfg, 20, 3, seed=41), _stream_data(cfg, 15, 2, seed=42)]
+        with rpc.BatchedRpcClient("127.0.0.1", server.port, timeout_s=0.5,
+                                  batch_window_s=1e-3) as client:
+            tenants = [
+                multiplex.Tenant(
+                    name=f"tenant{i}",
+                    state=engine.init_fleet(cfg, xs.shape[1]),
+                    ticks=(x for x in xs),
+                    cfg=cfg,
+                    teacher=client.tenant(f"tenant{i}"),
+                    mode="train_phase",
+                )
+                for i, xs in enumerate(datas)
+            ]
+            results, _ = multiplex.run(tenants)
+            for i, xs in enumerate(datas):
+                s = results[f"tenant{i}"].stats
+                assert s.queries_issued == xs.shape[0] * xs.shape[1]
+                assert s.queries_lost > 0  # P[no loss in 20 asks] ~ 0.7^20
+                assert s.labels_applied > 0
+                assert s.queries_issued == s.labels_applied + s.queries_dropped + s.queries_lost
+                _assert_reconciled(s)
+            assert client.timed_out > 0  # the deadline did the loss mapping
+    finally:
+        server.close()
+
+
+def test_shared_rpc_teachers_dedups_by_endpoint():
+    s1 = rpc.LabelServer(n_out=4).start()
+    s2 = rpc.LabelServer(n_out=4).start()
+    try:
+        teachers, clients = multiplex.shared_rpc_teachers(
+            [("127.0.0.1", s1.port), ("127.0.0.1", s1.port),
+             ("127.0.0.1", s2.port)],
+            timeout_s=5.0,
+        )
+        assert len(teachers) == 3 and len(clients) == 2
+        assert teachers[0]._client is teachers[1]._client  # same endpoint
+        assert teachers[2]._client is not teachers[0]._client
+        for c in clients:
+            c.close()
+    finally:
+        s1.close()
+        s2.close()
+
+
+def test_shared_rpc_teachers_closes_partial_clients_on_failure():
+    """A later endpoint's failed dial must not leak the clients already
+    built (their sockets and reader/flusher threads outlive the call)."""
+    s1 = rpc.LabelServer(n_out=4).start()
+    tmp = socket.socket()
+    tmp.bind(("127.0.0.1", 0))
+    dead_port = tmp.getsockname()[1]
+    tmp.close()  # nothing listens here anymore
+    try:
+        with pytest.raises(OSError):
+            multiplex.shared_rpc_teachers(
+                [("127.0.0.1", s1.port), ("127.0.0.1", dead_port)],
+                timeout_s=1.0, connect_timeout_s=1.0,
+            )
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            with s1._tlock:
+                if not s1._conns:
+                    break
+            time.sleep(5e-3)
+        with s1._tlock:  # the good client's connection was torn down
+            assert not s1._conns
+    finally:
+        s1.close()
+
+
+# ---------------------------------------------------------------------------
+# Bugfix: the label server's thread list stays bounded
+# ---------------------------------------------------------------------------
+
+
+def test_burst_of_connections_keeps_server_thread_list_bounded():
+    """One thread per accepted connection, pruned on accept and joined on
+    close — a long-running server must not accumulate dead threads."""
+    server = rpc.LabelServer(n_out=4).start()
+    try:
+        feats = np.zeros((1, 2), np.float32)
+        mask = np.ones(1, bool)
+        for _ in range(40):
+            with rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=5.0) as t:
+                t.ask(feats, mask, tick=0)
+                assert _drain(t)
+            time.sleep(2e-3)
+        # One more accept prunes whatever died above.
+        with rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=5.0):
+            time.sleep(0.05)
+            with server._tlock:
+                n_tracked = len(server._threads)
+        # Pre-fix this was ~42 (one dead entry per past connection).
+        assert n_tracked <= 10, n_tracked
+    finally:
+        server.close()
+    assert server.thread_count() == 0  # close() joined every worker
+
+
+# ---------------------------------------------------------------------------
+# Bugfix: socket writes are serialized (no torn frames)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["solo", "batched"])
+def test_concurrent_asks_never_tear_a_frame(server, transport):
+    """Many threads hammering one shared connection: every frame must hit
+    the wire intact (no interleaved partial writes), so every ask gets its
+    reply and the server sees zero framing errors.  Load-bearing for the
+    batched client, where N tenants genuinely share one socket."""
+    n_threads, n_asks, s_len = 8, 25, 3
+    feats = np.zeros((s_len, 4), np.float32)
+    mask = np.ones(s_len, bool)
+    if transport == "solo":
+        teacher = rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=30.0)
+        handles = [teacher] * n_threads
+        closer = teacher
+    else:
+        client = rpc.BatchedRpcClient("127.0.0.1", server.port, timeout_s=30.0,
+                                      batch_window_s=5e-4, batch_max=7)
+        handles = [client.tenant(f"h{i}") for i in range(n_threads)]
+        closer = client
+    try:
+        def worker(h):
+            for k in range(n_asks):
+                h.ask(feats, mask, tick=k)
+
+        threads = [threading.Thread(target=worker, args=(h,)) for h in handles]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        want = n_threads * n_asks
+        replies = []
+        deadline = time.monotonic() + 20.0
+        while len(replies) < want and time.monotonic() < deadline:
+            for h in set(handles):
+                replies += h.poll(0)
+            time.sleep(1e-3)
+        assert len(replies) == want, (len(replies), want)
+        for r in replies:  # every reply is a well-formed, correct frame
+            assert r.labels.shape == (s_len,) and r.answered.all()
+        assert server.frame_errors == 0
+    finally:
+        closer.close()
+
+
+# ---------------------------------------------------------------------------
+# Bugfix: a mid-frame write failure poisons the connection
+# ---------------------------------------------------------------------------
+
+
+class _DeadFile:
+    """A write file that fails mid-frame, like a peer reset under a
+    half-flushed buffer."""
+
+    def __init__(self):
+        self.write_calls = 0
+
+    def write(self, data):
+        self.write_calls += 1
+        raise OSError("connection reset mid-frame")
+
+    def flush(self):
+        pass
+
+    def close(self):
+        pass
+
+
+def test_write_failure_marks_solo_connection_dead(server):
+    feats = np.zeros((2, 3), np.float32)
+    mask = np.ones(2, bool)
+    teacher = rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=0.2)
+    dead = _DeadFile()
+    teacher._conn.wfile = dead
+    t0 = teacher.ask(feats, mask, 0)  # write fails -> connection poisoned
+    t1 = teacher.ask(feats, mask, 1)  # must NOT touch the wire again
+    assert teacher.broken
+    assert dead.write_calls == 1, "an ask wrote after the stream desynchronized"
+    assert t0 != t1
+    assert teacher.in_flight() == 2  # both map to timeout -> loss...
+    time.sleep(0.25)
+    assert teacher.in_flight() == 0
+    assert teacher.poll(0) == []
+    assert teacher.timed_out == 2  # ...exactly like any other timeout
+
+
+def test_write_failure_marks_batched_connection_dead(server):
+    feats = np.zeros((2, 3), np.float32)
+    mask = np.ones(2, bool)
+    client = rpc.BatchedRpcClient("127.0.0.1", server.port, timeout_s=0.2,
+                                  batch_window_s=0.0)  # inline flush
+    a, b = client.tenant("a"), client.tenant("b")
+    dead = _DeadFile()
+    client._conn.wfile = dead
+    a.ask(feats, mask, 0)
+    b.ask(feats, mask, 1)  # broken: queued asks drain without a write
+    assert client.broken
+    assert dead.write_calls == 1
+    assert not client._queue, "a dead connection must not accumulate asks"
+    time.sleep(0.25)
+    assert a.in_flight() == 0 and b.in_flight() == 0
+    assert a.poll(0) == [] and b.poll(0) == []
+    assert a.timed_out == 1 and b.timed_out == 1
+    client.close()
+
+
+def test_stream_run_survives_a_poisoned_connection(server):
+    """End to end: the runtime keeps ticking over a dead teacher socket —
+    every query meters as lost, accounting exact, no exception."""
+    cfg = _cfg(min_trained=1_000_000)
+    xs = _stream_data(cfg, 5, 2, seed=51)
+    teacher = rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=0.2)
+    teacher._conn.wfile = _DeadFile()
+    st, outs, stats = stream.run(
+        engine.init_fleet(cfg, 2), (x for x in xs), cfg, teacher,
+        mode="train_phase",
+    )
+    assert stats.labels_applied == 0
+    assert stats.queries_lost == stats.queries_issued == 5 * 2
+    assert int(np.asarray(st.elm.count).sum()) == 0
+    _assert_reconciled(stats)
+    teacher.close()
