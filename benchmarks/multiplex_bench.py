@@ -1,22 +1,29 @@
-"""Multi-tenant multiplexer vs N sequential stream.run calls.
+"""Multi-tenant multiplexer vs N sequential stream.run calls — and cohort
+fusion (ISSUE 6) vs both.
 
-Measures aggregate stream-steps/second and per-tenant tick p50/p95 for N
-independent fleets (tenants) of S streams over T ticks each:
+Measures aggregate stream-steps/second for N independent same-shaped
+fleets (tenants) of S streams over T ticks each:
 
   * ``sequential`` — N back-to-back ``stream.run`` calls, one per tenant
     (the no-multiplexer baseline: each fleet waits for the previous one).
-  * ``multiplex``  — ``engine.multiplex.run`` interleaving the same N
-    tenants round-robin in one process, sharing compiled runners.
+  * ``unfused``    — ``engine.multiplex.run(fuse=False)`` interleaving the
+    same N tenants round-robin, one jitted dispatch per tenant per tick.
+  * ``fused``      — ``fuse=True``: same-shaped tenants stack into one
+    cohort (``engine.cohort``) and advance with ONE batched dispatch per
+    tick for the whole group.
 
-With identical tenant configs the multiplexer pays only scheduler overhead
-(the executables are shared either way through the runner LRUs), so
-aggregate throughput should stay >= ~90% of sequential — that, plus the
-bit-for-bit parity locked by tests/test_multiplex.py, is the acceptance
-bar for serving many fleets from one process.  Both sides report best-of-N
-interleaved wall time (same protocol as stream_bench).
+With identical tenant configs the unfused multiplexer pays only scheduler
+overhead (executables are shared through the runner LRUs), so it holds
+>= ~90% of sequential.  The fused path's acceptance bar is stronger: at
+N >= 8 it must *clearly beat* sequential — per-dispatch overhead is paid
+once per cohort instead of once per tenant — while staying bit-for-bit
+identical to the unfused run (asserted here on every iteration, and
+locked structurally by tests/test_cohort.py).  Best-of-N interleaved wall
+time (same protocol as stream_bench).
 
-Writes BENCH_multiplex.json next to the repo root (same schema family as
-BENCH_stream.json).
+Full mode sweeps N in {2, 4, 8, 16}; ``--quick`` is the CI smoke: 4
+same-shaped lossy tenants at S=16, fused, writing
+BENCH_multiplex_quick.json instead of BENCH_multiplex.json.
 
 Run:  PYTHONPATH=src python benchmarks/multiplex_bench.py [--quick]
 """
@@ -38,6 +45,11 @@ from repro.core import oselm, pruning
 from repro.engine import multiplex, stream
 
 N_IN, N_HIDDEN, N_OUT = 64, 64, 6
+
+PARITY_STATS = (
+    "ticks", "stream_steps", "queries_issued", "labels_applied",
+    "queries_dropped", "queries_lost", "queries_coalesced",
+)
 
 
 def _cfg() -> engine.EngineConfig:
@@ -79,7 +91,8 @@ def _sequential_once(cfg, tenant_data, latency, loss, capacity):
     return time.perf_counter() - t0
 
 
-def _multiplex_once(cfg, tenant_data, latency, loss, capacity, backpressure):
+def _multiplex_once(cfg, tenant_data, latency, loss, capacity, backpressure,
+                    fuse):
     tenants = [
         multiplex.Tenant(
             name=f"tenant{i}",
@@ -95,7 +108,7 @@ def _multiplex_once(cfg, tenant_data, latency, loss, capacity, backpressure):
         for i, (xs_host, ys) in enumerate(tenant_data)
     ]
     t0 = time.perf_counter()
-    results, agg = multiplex.run(tenants)
+    results, agg = multiplex.run(tenants, fuse=fuse)
     jax.block_until_ready(results["tenant0"].state.elm.beta)
     dt = time.perf_counter() - t0
     for r in results.values():
@@ -103,35 +116,64 @@ def _multiplex_once(cfg, tenant_data, latency, loss, capacity, backpressure):
     return dt, results, agg
 
 
-def bench(cfg, tenant_data, latency, loss, capacity, backpressure, iters=6):
+def _assert_fused_unfused_identical(fused, unfused):
+    """The acceptance identity: fusion changes wall time, nothing else."""
+    assert fused.keys() == unfused.keys()
+    for name in fused:
+        a, b = fused[name], unfused[name]
+        for f in PARITY_STATS:
+            assert getattr(a.stats, f) == getattr(b.stats, f), (
+                f"{name}: stats.{f} diverged fused vs unfused"
+            )
+        for (path, la), (_, lb) in zip(
+            jax.tree_util.tree_flatten_with_path(a.state)[0],
+            jax.tree_util.tree_flatten_with_path(b.state)[0],
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(la), np.asarray(lb),
+                err_msg=f"{name}: state leaf {path} diverged fused vs unfused",
+            )
+
+
+def bench(cfg, tenant_data, latency, loss, capacity, backpressure, iters=4):
     """Best-of-N, interleaved (container scheduling drifts on a scale of
-    seconds; GC paused so gen-2 pauses don't pollute single iterations)."""
+    seconds; GC paused so gen-2 pauses don't pollute single iterations).
+    Every fused iteration is checked bit-for-bit against an unfused run."""
     _sequential_once(cfg, tenant_data, latency, loss, capacity)  # warmup
-    _multiplex_once(cfg, tenant_data, latency, loss, capacity, backpressure)
-    best_seq = best_mux = float("inf")
+    _multiplex_once(cfg, tenant_data, latency, loss, capacity, backpressure,
+                    fuse=True)
+    best = {"sequential": float("inf"), "unfused": float("inf"),
+            "fused": float("inf")}
     best_results = None
     gc.collect()
     gc.disable()
     try:
         for _ in range(iters):
-            best_seq = min(
-                best_seq, _sequential_once(cfg, tenant_data, latency, loss, capacity)
+            best["sequential"] = min(
+                best["sequential"],
+                _sequential_once(cfg, tenant_data, latency, loss, capacity),
             )
-            dt, results, agg = _multiplex_once(
-                cfg, tenant_data, latency, loss, capacity, backpressure
+            dt_u, results_u, _ = _multiplex_once(
+                cfg, tenant_data, latency, loss, capacity, backpressure,
+                fuse=False,
             )
-            if dt < best_mux:
-                best_mux, best_results = dt, results
+            best["unfused"] = min(best["unfused"], dt_u)
+            dt_f, results_f, _ = _multiplex_once(
+                cfg, tenant_data, latency, loss, capacity, backpressure,
+                fuse=True,
+            )
+            _assert_fused_unfused_identical(results_f, results_u)
+            if dt_f < best["fused"]:
+                best["fused"], best_results = dt_f, results_f
     finally:
         gc.enable()
-    return best_seq, best_mux, best_results
+    return best, best_results
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: 2 tenants, S=16, lossy teacher")
-    ap.add_argument("--tenants", type=int, default=2)
+                    help="CI smoke: 4 same-shaped lossy tenants, S=16, fused")
     ap.add_argument("--backpressure", default="drop_oldest",
                     choices=stream.BACKPRESSURE_POLICIES)
     ap.add_argument("--out", default=None)
@@ -140,22 +182,32 @@ def main(argv=None):
         name = "BENCH_multiplex_quick.json" if args.quick else "BENCH_multiplex.json"
         args.out = str(pathlib.Path(__file__).resolve().parent.parent / name)
 
-    # (S, T, teacher latency, loss) — quick is the ISSUE-3 CI smoke shape.
-    cases = (
-        [(16, 32, 2, 0.2)] if args.quick else [(512, 64, 0, 0.0), (512, 64, 4, 0.0)]
-    )
+    # (N tenants, S, T, teacher latency, loss) — quick is the CI smoke shape
+    # (4 lossy tenants fused into one cohort); full sweeps the cohort sizes
+    # the ISSUE-6 acceptance names, with a zero-latency and a laggy teacher.
+    if args.quick:
+        cases = [(4, 16, 32, 2, 0.2)]
+        iters = 2
+    else:
+        cases = [
+            (n, 64, 64, latency, 0.0)
+            for latency in (0, 4)
+            for n in (2, 4, 8, 16)
+        ]
+        iters = 4
     capacity = 16
     rows = []
-    print(f"== Multiplexer throughput ({args.tenants} tenants, "
-          f"n_in={N_IN}, N={N_HIDDEN}, backpressure={args.backpressure}) ==")
-    for s, t, latency, loss in cases:
+    print(f"== Multiplexer throughput: sequential vs unfused vs fused "
+          f"(n_in={N_IN}, N={N_HIDDEN}, backpressure={args.backpressure}) ==")
+    for n_tenants, s, t, latency, loss in cases:
         cfg = _cfg()
-        tenant_data = [_data(t, s, cfg, seed=i) for i in range(args.tenants)]
-        steps = args.tenants * t * s
-        best_seq, best_mux, results = bench(
-            cfg, tenant_data, latency, loss, capacity, args.backpressure
+        tenant_data = [_data(t, s, cfg, seed=i) for i in range(n_tenants)]
+        steps = n_tenants * t * s
+        best, results = bench(
+            cfg, tenant_data, latency, loss, capacity, args.backpressure,
+            iters=iters,
         )
-        seq_sps, mux_sps = steps / best_seq, steps / best_mux
+        sps = {k: steps / v for k, v in best.items()}
         per_tenant = {
             name: {
                 "tick_p50_ms": r.stats.tick_p50_ms,
@@ -169,24 +221,28 @@ def main(argv=None):
         rows.append({
             "streams": s,
             "ticks": t,
-            "tenants": args.tenants,
+            "tenants": n_tenants,
             "quantum": multiplex.DEFAULT_QUANTUM,
             "n_hidden": N_HIDDEN,
             "teacher_latency_ticks": latency,
             "teacher_loss_prob": loss,
             "backpressure": args.backpressure,
-            "sequential_steps_per_s": seq_sps,
-            "multiplex_steps_per_s": mux_sps,
-            "multiplex_vs_sequential": mux_sps / seq_sps,
+            "sequential_steps_per_s": sps["sequential"],
+            "unfused_steps_per_s": sps["unfused"],
+            "fused_steps_per_s": sps["fused"],
+            "unfused_vs_sequential": sps["unfused"] / sps["sequential"],
+            "fused_vs_sequential": sps["fused"] / sps["sequential"],
+            "fused_vs_unfused": sps["fused"] / sps["unfused"],
+            "bit_for_bit": True,  # asserted every fused iteration
             "per_tenant": per_tenant,
         })
-        p95s = ", ".join(
-            f"{n} p50/p95 {d['tick_p50_ms']:.2f}/{d['tick_p95_ms']:.2f} ms"
-            for n, d in per_tenant.items()
-        )
-        print(f"S={s:4d} T={t:3d} lat={latency:2d} loss={loss:.1f}: "
-              f"sequential {seq_sps:>11,.0f} sps | multiplex {mux_sps:>11,.0f} sps "
-              f"({100 * mux_sps / seq_sps:5.1f}%) | {p95s}")
+        print(f"N={n_tenants:2d} S={s:3d} T={t:3d} lat={latency:2d} "
+              f"loss={loss:.1f}: seq {sps['sequential']:>10,.0f} sps | "
+              f"unfused {sps['unfused']:>10,.0f} sps "
+              f"({100 * sps['unfused'] / sps['sequential']:5.1f}%) | "
+              f"fused {sps['fused']:>10,.0f} sps "
+              f"({100 * sps['fused'] / sps['sequential']:5.1f}% of seq, "
+              f"{sps['fused'] / sps['unfused']:.2f}x unfused)")
 
     out = {"bench": "multiplex", "backend": jax.default_backend(), "rows": rows}
     pathlib.Path(args.out).write_text(json.dumps(out, indent=2) + "\n")

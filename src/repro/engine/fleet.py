@@ -58,6 +58,66 @@ def stream_slice(state: EngineState, s: int) -> EngineState:
     return jax.tree.map(lambda a: a[s], state)
 
 
+# -- stacked-state helpers (cohort fusion, engine/cohort.py) ----------------
+#
+# A cohort stacks N same-shaped tenants' EngineStates along the leading
+# stream axis (tenant axis folded onto S) so one fused plan/learn dispatch
+# advances all of them.  Every per-stream op in this module is elementwise
+# or einsum-batched over S, so row r of a stacked dispatch is bit-for-bit
+# row r of the corresponding solo dispatch — the property the cohort
+# engine's solo-parity guarantee rests on (locked by tests/test_cohort.py).
+
+
+def stack_streams(states: list[EngineState]) -> EngineState:
+    """Concatenate fleets along the leading stream axis."""
+    return jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=0), *states)
+
+
+def slice_streams(state: EngineState, lo: int, hi: int) -> EngineState:
+    """Extract the ``[lo:hi]`` stream window (one cohort member's rows)."""
+    return jax.tree.map(lambda a: a[lo:hi], state)
+
+
+def remove_streams(state: EngineState, lo: int, hi: int) -> EngineState:
+    """Drop the ``[lo:hi]`` stream window (evict a member from a cohort)."""
+    return jax.tree.map(
+        lambda a: jnp.concatenate([a[:lo], a[hi:]], axis=0), state
+    )
+
+
+@functools.lru_cache(maxsize=RUNNER_CACHE_SIZE)
+def _patch_learn_runner(cfg: EngineConfig, lo: int, hi: int, donate: bool):
+    """Learn on one member's ``[lo:hi]`` row window of a stacked cohort
+    state, in place: slice the window out, run the member-width ``learn``,
+    and scatter the updated P/beta/ladder rows back with ``.at[lo:hi]`` —
+    donation keeps the full-width buffers in place, so a straggler reply
+    (a ticket asked before its tenant joined the cohort, or before a
+    resize) costs one member-width update, not a full-width one.  Rows
+    outside the window are untouched, so this is bit-for-bit the solo
+    ``learn`` on those rows."""
+
+    def run_patch(elm, prune, drift, meter, h, labels, pred, conf, mask,
+                  controller_on, theta):
+        sub = EngineState(
+            elm=jax.tree.map(lambda a: a[lo:hi], elm),
+            prune=jax.tree.map(lambda a: a[lo:hi], prune),
+            drift=jax.tree.map(lambda a: a[lo:hi], drift),
+            meter=jax.tree.map(lambda a: a[lo:hi], meter),
+        )
+        new_sub = learn(
+            sub, h, labels, pred, conf, mask, controller_on, cfg, theta=theta
+        )
+        new_elm = jax.tree.map(
+            lambda full, part: full.at[lo:hi].set(part), elm, new_sub.elm
+        )
+        new_prune = jax.tree.map(
+            lambda full, part: full.at[lo:hi].set(part), prune, new_sub.prune
+        )
+        return new_elm, new_prune
+
+    return jax.jit(run_patch, donate_argnums=(0, 1) if donate else ())
+
+
 def _tree_where(cond: jnp.ndarray, a, b):
     """Per-stream select between two pytrees of (S,)-leading leaves."""
     return jax.tree.map(
@@ -300,15 +360,19 @@ def _chunk_runner(cfg: EngineConfig, mode: str, donate: bool):
 def runner_cache_info() -> dict:
     """Hit/miss/size counters of the compiled-runner cache, for serving
     stats (``engine.stream.cache_stats`` merges these with its own)."""
-    info = _chunk_runner.cache_info()
-    return {
-        "chunk_runner": {
+    out = {}
+    for name, fn in (
+        ("chunk_runner", _chunk_runner),
+        ("patch_learn_runner", _patch_learn_runner),
+    ):
+        info = fn.cache_info()
+        out[name] = {
             "hits": info.hits,
             "misses": info.misses,
             "size": info.currsize,
             "maxsize": info.maxsize,
         }
-    }
+    return out
 
 
 def run_fleet(

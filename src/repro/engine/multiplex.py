@@ -10,6 +10,17 @@ Tenants with the same ``(cfg, mode, donate)`` therefore share one compiled
 executable: adding a tenant with a config already being served costs no
 compile and no extra executable memory.
 
+Cohort fusion (``fuse=True``, the default) goes one step further: tenants
+that also share a stream width are packed into *cohorts*
+(``engine/cohort.py``) whose ``EngineState`` pytrees stack along the
+leading stream axis, so one fused stacked dispatch per tick advances the
+whole cohort instead of one dispatch per tenant — eliminating the
+tick-switch cache penalty entirely at high tenant counts.  Each tenant
+keeps its own ring / teacher / backpressure / stats / tick cursor, and
+per-tenant results stay bit-for-bit identical to the unfused run (locked
+by ``tests/test_cohort.py``); ``fuse=False`` restores the one-dispatch-
+per-tenant scheduler.
+
 Scheduling (``sched``):
 
 * ``"rr"`` (default) — round-robin with a ``quantum``-tick time slice:
@@ -80,6 +91,7 @@ from typing import Iterable, NamedTuple, Optional
 
 import numpy as np
 
+from repro.engine import cohort as cohort_mod
 from repro.engine import snapshot as snapshot_mod
 from repro.engine import stream
 from repro.engine.types import EngineConfig, EngineState, FleetStepOutput
@@ -272,6 +284,7 @@ class _Slot:
         self.s = int(np.shape(np.asarray(self.session.state.elm.count))[0])
         self.deficit = 0.0
         self.last_ticks = 0  # real ticks advanced in the last step() call
+        self.unit: Optional["_CohortUnit"] = None  # set while fused
         self.snapshots_taken = 0
         self._last_snap_t = self.session.t
         self.draining = False
@@ -342,6 +355,10 @@ class _Slot:
         )
         if not (due or force) or not self.session.started():
             return False
+        if self.unit is not None:
+            # Fused member: its session.state is stale while the cohort
+            # holds the authoritative stacked rows — write them back first.
+            self.unit.cohort.refresh(self.session)
         self.manager.save_async(self.session.t, self.session.snapshot())
         self._last_snap_t = self.session.t
         self.snapshots_taken += 1
@@ -355,6 +372,78 @@ class _Slot:
         self.result = TenantResult(
             name=self.tenant.name, state=state, outputs=outs, stats=stats
         )
+
+
+class _CohortUnit:
+    """Scheduler-side unit driving one fused cohort of slots.
+
+    Takes the place of its member slots in the scheduler's live list: one
+    ``step`` advances the whole cohort in lockstep with fused dispatches
+    (``engine/cohort.py``).  ``s`` — the DRR tick cost — is the shared
+    member width, so each fused member receives exactly the credit/debit
+    schedule its solo slot would (cohorts only form between same-width
+    tenants); the fused tick just does all members' device work at once.
+    """
+
+    def __init__(self, slots: list[_Slot]):
+        self.slots = list(slots)
+        self.cohort = cohort_mod.CohortSession([s.session for s in slots])
+        self.s = slots[0].s
+        self.deficit = 0.0
+        self.last_ticks = 0
+        self.draining = False  # members drain solo, after release
+
+    def attach(self, slot: _Slot) -> None:
+        self.cohort.attach(slot.session)
+        self.slots.append(slot)
+        slot.unit = self
+
+    def release(self, slot: _Slot) -> list[_Slot]:
+        """Detach one member (live migration out).  Returns slots freed as
+        a side effect: when one member remains the cohort dissolves and
+        that member continues solo."""
+        self.cohort.detach(slot.session)
+        self.slots.remove(slot)
+        slot.unit = None
+        freed = []
+        if len(self.slots) == 1:
+            last = self.slots.pop()
+            self.cohort.detach(last.session)
+            last.unit = None
+            freed.append(last)
+        return freed
+
+    def step(self, drain: bool, n_ticks: int) -> tuple[bool, list[_Slot]]:
+        """Advance the cohort by up to ``n_ticks`` fused ticks.  Returns
+        ``(live, released)`` — live False once the cohort dissolved;
+        released slots (exhausted members, or the last member of a
+        dissolved cohort) re-enter the scheduler as independent slots."""
+        del drain  # released members drain through their solo slot path
+        self.last_ticks = 0
+        released: list[_Slot] = []
+        for _ in range(n_ticks):
+            if len(self.slots) < 2:
+                break
+            nxts = [next(s.it, None) for s in self.slots]
+            detached, advanced = self.cohort.tick(nxts)
+            if advanced:
+                self.last_ticks += 1
+            for sess in detached:
+                slot = next(s for s in self.slots if s.session is sess)
+                self.slots.remove(slot)
+                slot.unit = None
+                slot.draining = True
+                slot.maybe_snapshot()
+                released.append(slot)
+        for slot in self.slots:
+            slot.maybe_snapshot()
+        if len(self.slots) == 1:
+            # A cohort of one is pure overhead: dissolve, continue solo.
+            last = self.slots.pop()
+            self.cohort.detach(last.session)
+            last.unit = None
+            released.append(last)
+        return bool(self.slots), released
 
 
 DEFAULT_QUANTUM = 8
@@ -380,6 +469,7 @@ class Multiplexer:
         resume: bool = False,
         snapshots: Optional[dict] = None,
         pending: str = "auto",
+        fuse: bool = True,
     ):
         if quantum < 1:
             raise ValueError(f"quantum must be >= 1, got {quantum}")
@@ -396,13 +486,16 @@ class Multiplexer:
         self.drain = drain
         self.quantum = quantum
         self.sched = sched
+        self.fuse = fuse
+        self._cohorts: dict = {}  # fuse key -> live _CohortUnit
         self.snapshot_dir = snapshot_dir
         self.snapshot_every = snapshot_every
         self._resume = resume
         self._pending = pending
         self.agg = MultiplexStats(n_tenants=len(tenants))
         self._slots: list[_Slot] = []
-        self._live: list[_Slot] = []
+        # Scheduling units: solo _Slots and fused _CohortUnits (fuse=True).
+        self._live: list = []
         self._t0: Optional[float] = None
         for t in tenants:
             self.admit(t, snapshot=(snapshots or {}).get(t.name))
@@ -466,6 +559,18 @@ class Multiplexer:
         slot = self._slot(name)
         if slot.result is not None:
             raise ValueError(f"tenant {name!r} already finished; nothing to migrate")
+        if slot.unit is not None:
+            # Migrating out of a fused cohort: detach first (writes the
+            # member's stacked rows + pending plan back into its session),
+            # then the ordinary solo quiesce/snapshot flow applies.
+            unit = slot.unit
+            freed = unit.release(slot)
+            if not unit.slots and unit in self._live:
+                idx = self._live.index(unit)
+                self._live[idx : idx + 1] = freed
+            else:
+                self._live.extend(freed)
+            self._cohorts = {k: u for k, u in self._cohorts.items() if u.slots}
         if quiesce_ticks > 0:
             slot.session.quiesce(
                 max_ticks=quiesce_ticks, idle_sleep_s=slot.DRAIN_IDLE_SLEEP_S
@@ -497,33 +602,99 @@ class Multiplexer:
                         s.manager.wait()
             raise
 
+    def _form_cohorts(self) -> None:
+        """Pack fusable live slots into cohorts by ``(cfg, mode, donate, S)``.
+
+        Runs at every round start, so tenants admitted mid-run (including
+        live-migration snapshots restored with pending tickets) join a
+        matching cohort at the next scheduling boundary.  Singleton groups
+        stay on the solo slot path — a cohort only pays off with >= 2
+        members.  The stream width S is part of the key: cohort members
+        tick in lockstep, and fusing different widths would break the DRR
+        scheduler's per-tenant fairness (each fused member must cost
+        exactly what its solo slot would)."""
+        groups: dict = {}
+        for u in self._live:
+            if not isinstance(u, _Slot) or u.unit is not None or u.draining:
+                continue
+            sess = u.session
+            if sess.started() and sess._p is None:
+                continue  # restored after its stream ended: drain only
+            key = (sess.cfg, sess.mode, sess._donate, u.s)
+            groups.setdefault(key, []).append(u)
+        for key, slots in groups.items():
+            unit = self._cohorts.get(key)
+            if unit is not None and unit.slots:
+                for s in slots:
+                    unit.attach(s)
+                    self._live.remove(s)
+            elif len(slots) >= 2:
+                unit = _CohortUnit(slots)
+                for s in slots:
+                    s.unit = unit
+                idx = min(self._live.index(s) for s in slots)
+                for s in slots:
+                    self._live.remove(s)
+                self._live.insert(idx, unit)
+                self._cohorts[key] = unit
+
+    def _step_unit(self, u, n_ticks: int) -> list:
+        """Step one scheduler unit; returns the units live after it (the
+        unit itself, plus any slots a cohort released this round — an
+        exhausted member immediately gets its first solo drain slice, like
+        the solo path's same-call drain)."""
+        out = []
+        if isinstance(u, _CohortUnit):
+            live, released = u.step(self.drain, n_ticks)
+            if live:
+                out.append(u)
+            else:
+                self._cohorts = {
+                    k: un for k, un in self._cohorts.items() if un is not u
+                }
+            for r in released:
+                r.deficit = 0.0
+                if r.draining and not self.drain:
+                    r._finish()  # drain=False: settle, exactly like solo
+                elif not r.draining or r.step(self.drain, 0):
+                    out.append(r)
+        elif u.step(self.drain, n_ticks):
+            out.append(u)
+        return out
+
     def _round(self) -> bool:
         if self._t0 is None:
             self._t0 = time.perf_counter()
         if not self._live:
             return False
         self.agg.rounds += 1
+        if self.fuse:
+            self._form_cohorts()
         if self.sched == "drr":
             # Credit is sized by the smallest *ticking* tenant: a tenant
             # that is only draining costs no device time and must not gate
             # everyone else's budget (a small drained tenant stuck waiting
             # out a slow teacher would otherwise collapse live tenants to
-            # ~1 tick per S_big/S_small rounds).
-            ticking = [s.s for s in self._live if not s.draining]
+            # ~1 tick per S_big/S_small rounds).  A cohort unit's cost is
+            # its (shared) member width, so each fused member sees the
+            # same credit/debit schedule as its solo slot.
+            ticking = [u.s for u in self._live if not u.draining]
             credit = self.quantum * min(ticking) if ticking else 0
             nxt = []
-            for s in self._live:
-                s.deficit += credit
-                n = int(s.deficit // s.s)
-                live = s.step(self.drain, n)
-                s.deficit -= s.last_ticks * s.s
-                if s.draining:
-                    s.deficit = 0.0  # drained slices don't consume credit
-                if live:
-                    nxt.append(s)
+            for u in self._live:
+                u.deficit += credit
+                n = int(u.deficit // u.s)
+                stepped = self._step_unit(u, n)
+                u.deficit -= u.last_ticks * u.s
+                if u.draining:
+                    u.deficit = 0.0  # drained slices don't consume credit
+                nxt.extend(stepped)
             self._live = nxt
         else:
-            self._live = [s for s in self._live if s.step(self.drain, self.quantum)]
+            nxt = []
+            for u in self._live:
+                nxt.extend(self._step_unit(u, self.quantum))
+            self._live = nxt
         return bool(self._live)
 
     def run(self) -> tuple[dict[str, TenantResult], MultiplexStats]:
@@ -553,6 +724,7 @@ def run(
     snapshot_dir: Optional[str] = None,
     snapshot_every: int = 0,
     resume: bool = False,
+    fuse: bool = True,
 ) -> tuple[dict[str, TenantResult], MultiplexStats]:
     """Multiplex every tenant's stream over this process to completion.
 
@@ -566,6 +738,13 @@ def run(
     starved by huge ones (see module docstring).  The per-tenant result is
     bit-for-bit identical for every quantum and scheduler — only
     wall-clock interleaving changes.
+
+    ``fuse`` (default True) packs tenants with the same ``(cfg, mode,
+    donate)`` and stream width into *cohorts* advanced by one fused
+    stacked dispatch per tick instead of one per tenant
+    (``engine/cohort.py``) — per-tenant results stay bit-for-bit identical
+    to the unfused (and solo) run; only device dispatch count and
+    wall-clock interleaving change.
 
     ``snapshot_dir`` + ``snapshot_every`` enable per-tenant durability;
     ``resume=True`` restores tenants from their latest published snapshot
@@ -586,6 +765,7 @@ def run(
         snapshot_dir=snapshot_dir,
         snapshot_every=snapshot_every,
         resume=resume,
+        fuse=fuse,
     ).run()
 
 

@@ -782,9 +782,15 @@ class BatchedRpcClient:
 
     The HMAC handshake (``secret=``) runs once, here, per connection —
     not once per tenant.  Writes hold the write lock for the whole frame,
-    and a mid-frame ``OSError`` marks the connection dead: queued and
-    later asks then map straight to timeout → loss (never garbage after a
-    half-frame).
+    and a mid-frame ``OSError`` marks the connection dead.  A dead
+    connection gets **one** metered lazy reconnect-and-reask attempt at
+    the next flush (``reconnects`` / ``asks_reasked``): a fresh dial +
+    handshake + reader thread, with every still-pending unexpired ticket
+    re-asked through it — original deadlines kept, so a reply that would
+    have timed out anyway still maps to loss.  If the dial fails (or the
+    fresh connection poisons again before the flush), the old behavior
+    applies: queued and later asks map straight to timeout → loss until
+    the *next* poisoning earns its own single attempt.
     """
 
     def __init__(self, host: str, port: int, timeout_s: float = 5.0,
@@ -796,20 +802,33 @@ class BatchedRpcClient:
         self.timeout_s = timeout_s
         self.batch_window_s = batch_window_s
         self.batch_max = int(batch_max)
+        # Kept for the lazy reconnect path.
+        self._host, self._port = host, int(port)
+        self._connect_timeout_s = connect_timeout_s
+        self._secret = secret
         # The write lock + HMAC handshake live in the connection — once
         # per connection, i.e. once per teacher host, not once per tenant.
         self._conn = _WireConnection(host, port, connect_timeout_s, secret)
         self._cond = threading.Condition()  # queue + pending + inboxes
         self._closed = False
         self._next_ticket = 0
-        # ticket -> (owning handle, wall deadline); present == in flight.
-        self._pending: dict[int, tuple[BatchedRpcTeacher, float]] = {}
+        # ticket -> (owning handle, wall deadline, wire payload); present
+        # == in flight.  The payload (tick, mask, feats) rides along so a
+        # reconnect can re-ask in-flight tickets — bounded by the tenants'
+        # ring capacities, same rationale as ``stream.PendingTicket.x``.
+        self._pending: dict[
+            int, tuple[BatchedRpcTeacher, float, tuple]
+        ] = {}
         # Unflushed asks: (ticket, tick, mask, feats).
         self._queue: list[tuple[int, int, np.ndarray, np.ndarray]] = []
         self._flush_deadline: Optional[float] = None
         self._tenants: list[BatchedRpcTeacher] = []
+        self._reconnect_lock = threading.Lock()
+        self._reconnect_spent = False  # current broken conn's attempt used
         self.timed_out = 0  # deadline casualties across all tenants
         self.asks_sent = 0  # individual asks across all frames
+        self.reconnects = 0  # successful lazy reconnects
+        self.asks_reasked = 0  # in-flight asks re-sent after a reconnect
         self._reader = threading.Thread(
             target=_reply_reader, args=(self._conn.sock, self._on_replies),
             daemon=True,
@@ -848,7 +867,10 @@ class BatchedRpcClient:
         with self._cond:
             ticket = self._next_ticket
             self._next_ticket += 1
-            self._pending[ticket] = (handle, time.monotonic() + self.timeout_s)
+            self._pending[ticket] = (
+                handle, time.monotonic() + self.timeout_s,
+                (int(tick), mask_np, feats_np),
+            )
             self._queue.append((ticket, int(tick), mask_np, feats_np))
             if (len(self._queue) >= self.batch_max
                     or self.batch_window_s <= 0 or self._conn.broken):
@@ -870,7 +892,7 @@ class BatchedRpcClient:
     def _in_flight(self, handle: BatchedRpcTeacher) -> int:
         self._expire()
         with self._cond:
-            return sum(1 for h, _ in self._pending.values() if h is handle)
+            return sum(1 for ent in self._pending.values() if ent[0] is handle)
 
     # -- internals ---------------------------------------------------------
 
@@ -900,11 +922,60 @@ class BatchedRpcClient:
                 self._send(batch)
 
     def _send(self, batch) -> None:
-        # A dead connection leaves the batch's tickets pending until
-        # their deadlines, then maps them to loss.
+        if self._conn.broken:
+            # One lazy reconnect attempt per poisoned connection.  On
+            # success every still-pending unexpired ticket — including
+            # this batch's, registered in ``_ask`` — is re-asked through
+            # the fresh connection, so the batch must not be sent again
+            # here.  On failure the old behavior applies: the tickets
+            # stay pending until their deadlines, then map to loss.
+            self._reconnect_and_reask()
+            return
         if self._conn.send(encode_asks(batch)):
             with self._cond:
                 self.asks_sent += len(batch)
+
+    def _reconnect_and_reask(self) -> None:
+        with self._reconnect_lock:
+            if self._closed:
+                return  # nobody is left to consume the replies
+            if not self._conn.broken:
+                return  # another thread already swapped in a live conn
+            if self._reconnect_spent:
+                return  # this poisoning's single attempt is used up
+            self._reconnect_spent = True
+            try:
+                conn = _WireConnection(self._host, self._port,
+                                       self._connect_timeout_s, self._secret)
+            except OSError:
+                return
+            old, self._conn = self._conn, conn
+            threading.Thread(
+                target=_reply_reader, args=(conn.sock, self._on_replies),
+                daemon=True,
+            ).start()
+            old.close()
+            with self._cond:
+                self.reconnects += 1
+                # A later poisoning earns its own single attempt.
+                self._reconnect_spent = False
+                # Every pending ticket's frame either died with the old
+                # socket or was answered on it after it went half-dead —
+                # either way the reply can now only arrive via a re-ask.
+                # Original deadlines are kept: a reply that would have
+                # timed out anyway still maps to loss.
+                now = time.monotonic()
+                resend = [
+                    (t, *payload)
+                    for t, (_, dl, payload) in sorted(self._pending.items())
+                    if dl >= now
+                ]
+            for i in range(0, len(resend), self.batch_max):
+                chunk = resend[i:i + self.batch_max]
+                if self._conn.send(encode_asks(chunk)):
+                    with self._cond:
+                        self.asks_sent += len(chunk)
+                        self.asks_reasked += len(chunk)
 
     def _on_replies(self, replies: list[TeacherReply], arrived: float) -> None:
         with self._cond:
@@ -912,7 +983,7 @@ class BatchedRpcClient:
                 ent = self._pending.pop(reply.ticket, None)
                 if ent is None:
                     continue  # unknown or already expired
-                handle, deadline = ent
+                handle, deadline = ent[0], ent[1]
                 if arrived > deadline:
                     handle.timed_out += 1
                     self.timed_out += 1
@@ -922,9 +993,9 @@ class BatchedRpcClient:
     def _expire(self) -> None:
         now = time.monotonic()
         with self._cond:
-            dead = [t for t, (_, dl) in self._pending.items() if dl < now]
+            dead = [t for t, ent in self._pending.items() if ent[1] < now]
             for t in dead:
-                handle, _ = self._pending.pop(t)
+                handle = self._pending.pop(t)[0]
                 handle.timed_out += 1
                 self.timed_out += 1
 

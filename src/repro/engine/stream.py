@@ -262,6 +262,40 @@ class PendingTicket(NamedTuple):
     x: object  # the tick's raw features (whatever the iterator yielded)
 
 
+class PlanSlice:
+    """Lazy row-window view of a cohort's full-width ``fleet.PlanOutput``.
+
+    Cohort fusion (``engine/cohort.py``) plans all members of a cohort in
+    one stacked dispatch; each member session's current plan and ring
+    entries then hold a ``PlanSlice`` instead of a solo-width
+    ``PlanOutput``.  Attribute access slices the full plan lazily
+    (device-side), and ``_asdict`` matches the NamedTuple protocol, so the
+    solo drain, snapshot (``snapshot._plan_to_tree``), and patch-learn
+    paths treat it exactly like a ``PlanOutput``.  ``materialize()`` turns
+    it into a real solo-width ``PlanOutput`` (detaching from the cohort).
+    """
+
+    __slots__ = ("full", "lo", "hi")
+
+    def __init__(self, full: fleet.PlanOutput, lo: int, hi: int):
+        self.full = full
+        self.lo = lo
+        self.hi = hi
+
+    def __getattr__(self, name):
+        # Only reached for names not in __slots__ — i.e. PlanOutput fields.
+        return getattr(self.full, name)[self.lo : self.hi]
+
+    def _asdict(self):
+        return {
+            k: getattr(self.full, k)[self.lo : self.hi]
+            for k in fleet.PlanOutput._fields
+        }
+
+    def materialize(self) -> fleet.PlanOutput:
+        return fleet.PlanOutput(**self._asdict())
+
+
 class DeferredAsk(NamedTuple):
     """A ``block``-policy ask waiting for a free ring slot."""
 
@@ -852,9 +886,14 @@ class StreamSession:
             # teacher (array_labels) looks up the right tick's labels.
             self._ask(d.x, d.queried, d.plan, d.tick)
 
-    def _claim(self, reply: TeacherReply, now: int):
-        """Resolve a reply against the ring; returns learn args or None,
-        with all drop/orphan/loss accounting applied."""
+    def _claim_entry(self, reply: TeacherReply, now: int):
+        """Accounting half of a reply claim: resolve the ticket against the
+        ring with all drop/orphan/loss metering and trained-row marking.
+        Returns ``(entry, mask)`` — the ring entry and the host-side apply
+        mask — or None when nothing is applicable.  ``_claim`` composes
+        this with ``_build_learn_args``; the cohort engine
+        (``engine/cohort.py``) uses the halves separately so it can scatter
+        many members' masks into one full-width fused learn."""
         stats = self.stats
         ent = self.ring.pop(reply.ticket)
         if ent is None:
@@ -878,6 +917,13 @@ class StreamSession:
         stats.label_latency_ticks.append(now - ent.tick)
         if self.collect and ent.tick < len(self._trained_rows):
             self._trained_rows[ent.tick] |= mask
+        return ent, mask
+
+    def _build_learn_args(self, ent: PendingTicket, reply: TeacherReply,
+                          mask: np.ndarray):
+        """Device half of a reply claim: package one claimed reply as
+        ``_learn_fn`` args (plan-time context + shipped labels + mask)."""
+        n = int(mask.sum())
         if n == mask.shape[0]:
             # Steady state (everyone queried, everyone answered): reuse one
             # device-resident mask instead of a fresh upload per tick.
@@ -896,6 +942,15 @@ class StreamSession:
             p.controller_on,
             p.theta,
         )
+
+    def _claim(self, reply: TeacherReply, now: int):
+        """Resolve a reply against the ring; returns learn args or None,
+        with all drop/orphan/loss accounting applied."""
+        claimed = self._claim_entry(reply, now)
+        if claimed is None:
+            return None
+        ent, mask = claimed
+        return self._build_learn_args(ent, reply, mask)
 
     def _learn(self, args) -> None:
         new_elm, new_prune = self._learn_fn(

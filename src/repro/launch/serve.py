@@ -31,6 +31,14 @@ per tenant.
 round robin in stream-step units, so a huge tenant cannot starve small
 ones.
 
+``--fuse-cohorts`` (default on) stacks same-shaped tenants — same engine
+config, mode, and stream width — into one cohort whose states ride a
+single batched plan/learn dispatch per quantum (``repro.engine.cohort``),
+instead of one dispatch per tenant.  Everything tenant-visible (pending
+rings, teachers, backpressure, accounting, snapshots, migration) stays
+per-tenant and bit-for-bit identical to the unfused path; ``off`` keeps
+one dispatch per tenant.
+
 Durable sessions (``repro.engine.snapshot``): ``--snapshot-dir`` +
 ``--snapshot-every`` publish per-tenant session snapshots atomically
 (keep-k) as the decode loop runs; ``--resume`` restores every tenant from
@@ -84,7 +92,8 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
           teacher_batch_max: int = rpc.DEFAULT_BATCH_MAX,
           teacher_secret: str = None, sched: str = "rr",
           snapshot_dir: str = None, snapshot_every: int = 0,
-          resume: bool = False, migrate: bool = False):
+          resume: bool = False, migrate: bool = False,
+          fuse_cohorts: bool = True):
     cfg = configs.get_config(arch, variant)
     key = jax.random.PRNGKey(seed)
     params = model_lib.layers.init_params(model_lib.build_schema(cfg), key)
@@ -188,7 +197,7 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
                              "restore from otherwise)")
         mux = multiplex.Multiplexer(
             tenant_list, sched=sched, snapshot_dir=snapshot_dir,
-            snapshot_every=snapshot_every, resume=resume,
+            snapshot_every=snapshot_every, resume=resume, fuse=fuse_cohorts,
             # Migration wants to stop mid-stream: schedule tick by tick so
             # the threshold check below lands before the stream drains.
             quantum=1 if migrate else multiplex.DEFAULT_QUANTUM,
@@ -214,7 +223,8 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
             # pending="reask": the destination teacher is a new connection
             # on a (conceptually) new host — never restore the old teacher's
             # state into it, re-ask whatever is still in flight.
-            mux_b = multiplex.Multiplexer([], sched=sched, pending="reask")
+            mux_b = multiplex.Multiplexer([], sched=sched, pending="reask",
+                                          fuse=fuse_cohorts)
             mux_b.admit(
                 multiplex.Tenant(
                     name="tenant0", state=None, ticks=rest_ticks, cfg=odl_cfg,
@@ -289,6 +299,10 @@ def main(argv=None):
     ap.add_argument("--sched", default="rr", choices=multiplex.SCHEDULERS,
                     help="rr: fixed quantum-tick round robin; drr: deficit "
                     "round robin in stream-step units (size-fair)")
+    ap.add_argument("--fuse-cohorts", default="on", choices=("on", "off"),
+                    help="stack same-shaped tenants into one batched "
+                    "plan/learn dispatch per quantum (bit-for-bit identical "
+                    "to unfused; off: one dispatch per tenant)")
     ap.add_argument("--teacher", default="latency", choices=("latency", "rpc"),
                     help="latency: in-process tick-granular model; "
                     "rpc: loopback TCP label server with timeout->loss")
@@ -335,7 +349,8 @@ def main(argv=None):
           teacher_batch_max=args.teacher_batch_max,
           teacher_secret=args.teacher_secret, sched=args.sched,
           snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
-          resume=args.resume, migrate=args.migrate)
+          resume=args.resume, migrate=args.migrate,
+          fuse_cohorts=args.fuse_cohorts == "on")
 
 
 if __name__ == "__main__":

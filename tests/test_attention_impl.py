@@ -32,6 +32,16 @@ def test_chunked_matches_naive(causal, window, chunk):
 
 
 def test_full_model_naive_vs_chunked():
+    """Full bf16 model, naive vs chunked attention.
+
+    Tolerances come from a 10-seed audit (plus repeated runs of the same
+    seed): the Frobenius relative error is tight and stable at ~0.011,
+    while the elementwise max wanders 0.047-0.078 *for the same seed*
+    across processes — CPU matmul threading jitters the bf16 rounding
+    tail.  The old ``atol=5e-2`` sat inside that band, which is exactly
+    why this test flaked on multi-file runs.  So: bound the stable
+    statistic tightly (~3x margin) and the noisy one loosely (~2x the
+    observed worst at the hidden states' unit scale)."""
     cfg = configs.get_config("qwen3-4b", "smoke").replace(
         attention_impl="chunked", attention_chunk=16
     )
@@ -42,9 +52,11 @@ def test_full_model_naive_vs_chunked():
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
     h1, _ = lm_hidden(params, toks, cfg_naive, remat=False)
     h2, _ = lm_hidden(params, toks, cfg, remat=False)
-    np.testing.assert_allclose(
-        np.asarray(h1, np.float32), np.asarray(h2, np.float32), atol=5e-2, rtol=5e-2
-    )
+    a = np.asarray(h1, np.float32)
+    b = np.asarray(h2, np.float32)
+    fro_rel = np.linalg.norm(a - b) / np.linalg.norm(a)
+    assert fro_rel < 3e-2, f"Frobenius relative error {fro_rel:.4f}"
+    assert np.abs(a - b).max() < 0.15, f"max abs diff {np.abs(a - b).max():.4f}"
 
 
 def test_chunked_grads_finite():

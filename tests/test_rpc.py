@@ -485,23 +485,68 @@ def test_write_failure_marks_solo_connection_dead(server):
     assert teacher.timed_out == 2  # ...exactly like any other timeout
 
 
-def test_write_failure_marks_batched_connection_dead(server):
+def test_write_failure_marks_batched_connection_dead():
+    """When the peer is gone for good, the single lazy reconnect attempt
+    fails and the old mapping applies: every pending ask → timeout → loss."""
+    server = rpc.LabelServer(n_out=4).start()
     feats = np.zeros((2, 3), np.float32)
     mask = np.ones(2, bool)
     client = rpc.BatchedRpcClient("127.0.0.1", server.port, timeout_s=0.2,
                                   batch_window_s=0.0)  # inline flush
+    server.close()  # nothing left to reconnect to
     a, b = client.tenant("a"), client.tenant("b")
     dead = _DeadFile()
     client._conn.wfile = dead
     a.ask(feats, mask, 0)
-    b.ask(feats, mask, 1)  # broken: queued asks drain without a write
+    b.ask(feats, mask, 1)  # broken: the one reconnect attempt fails (refused)
     assert client.broken
+    assert client.reconnects == 0 and client.asks_reasked == 0
     assert dead.write_calls == 1
     assert not client._queue, "a dead connection must not accumulate asks"
     time.sleep(0.25)
     assert a.in_flight() == 0 and b.in_flight() == 0
     assert a.poll(0) == [] and b.poll(0) == []
     assert a.timed_out == 1 and b.timed_out == 1
+    client.close()
+
+
+def test_batched_client_reconnects_once_and_reasks_in_flight(server):
+    """A poisoned connection earns ONE lazy reconnect at the next flush:
+    in-flight asks ride the fresh connection and get answered, instead of
+    every later ask mapping straight to timeout → loss.  A later poisoning
+    earns its own single attempt."""
+    feats = np.zeros((2, 3), np.float32)
+    mask = np.ones(2, bool)
+    client = rpc.BatchedRpcClient("127.0.0.1", server.port, timeout_s=10.0,
+                                  batch_window_s=0.0)  # inline flush
+    a, b = client.tenant("a"), client.tenant("b")
+    client._conn.wfile = _DeadFile()
+    ta = a.ask(feats, mask, 0)  # write fails -> poisoned, ticket pending
+    tb = b.ask(feats, mask, 1)  # next flush: reconnect, re-ask BOTH tickets
+    assert not client.broken
+    assert client.reconnects == 1
+    assert client.asks_reasked == 2
+    ra, rb = _drain(a), _drain(b)
+    assert [r.ticket for r in ra] == [ta]
+    assert [r.ticket for r in rb] == [tb]
+    assert ra[0].labels.tolist() == [rpc.expected_label(0, s, 4) for s in range(2)]
+    assert rb[0].labels.tolist() == [rpc.expected_label(1, s, 4) for s in range(2)]
+    assert client.timed_out == 0
+    assert a.timed_out == 0 and b.timed_out == 0
+    # A second poisoning is not starved by the first attempt.
+    client._conn.wfile = _DeadFile()
+    tc = a.ask(feats, mask, 2)
+    td = a.ask(feats, mask, 3)
+    assert not client.broken
+    assert client.reconnects == 2
+    assert client.asks_reasked == 4
+    replies = []
+    deadline = time.monotonic() + 10.0
+    while len(replies) < 2 and time.monotonic() < deadline:
+        replies += a.poll(0)
+        time.sleep(1e-3)
+    assert sorted(r.ticket for r in replies) == sorted([tc, td])
+    assert client.timed_out == 0
     client.close()
 
 
