@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import os
+import pathlib
 import time
 
 import jax
@@ -11,6 +13,30 @@ import numpy as np
 from repro import engine
 from repro.core import oselm, pruning
 from repro.data import har
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def bench_out_path(name: str, quick: bool = False, override=None) -> str:
+    """Where a benchmark writes its JSON result.
+
+    Full runs are the committed reference baselines (``BENCH_<name>.json``
+    at the repo root).  ``--quick`` runs are the CI smoke on shared
+    runners — noisy numbers that must NOT clobber the committed
+    ``BENCH_<name>_quick.json`` reference baselines — so they land in an
+    artifact directory instead: ``$BENCH_ARTIFACT_DIR`` if set, else
+    ``<repo>/bench_artifacts/`` (gitignored; CI uploads it), created on
+    demand.  ``override`` (a bench's ``--out``) wins over everything.
+    """
+    if override:
+        return str(override)
+    if not quick:
+        return str(_REPO_ROOT / f"BENCH_{name}.json")
+    art = pathlib.Path(
+        os.environ.get("BENCH_ARTIFACT_DIR", str(_REPO_ROOT / "bench_artifacts"))
+    )
+    art.mkdir(parents=True, exist_ok=True)
+    return str(art / f"BENCH_{name}_quick.json")
 
 
 def timer_us(fn, *args, warmup: int = 1, iters: int = 5) -> float:

@@ -11,9 +11,24 @@ Measures stream-steps/second for T ticks of S concurrent ODL streams:
     RLS entry; interpret mode on CPU, so S is capped — the number recorded
     validates the routing, not TPU speed).
 
-Writes BENCH_fleet.json next to the repo root.
+``--mesh`` runs the mega-fleet scaling sweep instead (S up to 262,144
+streams over the host's fleet mesh): single-device non-donated (the
+committed "engine" rows' path) and donated references, the GSPMD
+NamedSharding-placed resident fleet (``shard_fleet`` +
+``run_fleet_sharded``), and the shard-local blocked path (``split_fleet``
++ ``run_fleet_shards``, one donated dispatch per 512-stream block — a
+block's P slab stays cache-resident).  Every mesh mode is asserted
+bit-for-bit against the single-device run at equal S before its
+throughput is recorded.  On a CPU host force the device count first::
 
-Run:  PYTHONPATH=src python benchmarks/fleet_bench.py [--quick]
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python benchmarks/fleet_bench.py --mesh
+
+Writes BENCH_fleet.json next to the repo root (``--mesh`` merges a
+``"mesh"`` section into it; ``--quick`` runs land in the bench artifact
+dir instead — see ``benchmarks.common.bench_out_path``).
+
+Run:  PYTHONPATH=src python benchmarks/fleet_bench.py [--quick] [--mesh]
 """
 
 from __future__ import annotations
@@ -25,10 +40,16 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import engine
 from repro.core import drift as drift_mod
 from repro.core import oselm, pruning
+
+try:
+    from benchmarks import common
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    import common
 
 N_IN, N_HIDDEN, N_OUT = 64, 64, 6
 KERNEL_S_CAP = 256  # interpret-mode Pallas iterates the stream grid in Python
@@ -97,14 +118,128 @@ def bench_engine(cfg, xs, ys, chunk):
     return dt
 
 
+def _time_fresh(run, make_state, iters):
+    """Best-of-N wall time of ``run`` over a FRESH state per iteration —
+    donated runs consume their input, and state build/placement is device
+    setup, not steady-state throughput, so it stays untimed."""
+    out = jax.block_until_ready(run(make_state()))  # compile + warm caches
+    best = float("inf")
+    for _ in range(iters):
+        st = make_state()
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(run(st))
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_mesh(quick: bool):
+    """Mega-fleet scaling sweep over the host's fleet mesh; every mode's
+    beta is asserted bitwise against the single-device run at equal S."""
+    from repro.distributed import sharding
+    from repro.engine.fleet import DEFAULT_STREAM_BLOCK
+    from repro.launch import mesh as mesh_lib
+
+    fleet_mesh = mesh_lib.make_fleet_mesh()
+    n_dev = int(fleet_mesh.devices.size)
+    sizes = [(2048, 4)] if quick else [(8192, 4), (65536, 4), (262144, 4)]
+    rows = []
+    print(f"== Mesh-sharded fleet ({n_dev}-device fleet mesh, "
+          f"block={DEFAULT_STREAM_BLOCK}, n_in={N_IN}, N={N_HIDDEN}) ==")
+    for s, t in sizes:
+        cfg = _cfg()
+        xs, ys = _data(t, s, cfg)
+        steps = t * s
+        iters = 2 if s >= 200_000 else 3
+
+        def make():
+            return engine.init_fleet(cfg, s)
+
+        def run_single(st, donate=None):
+            return engine.run_fleet(
+                st, xs, ys, cfg, mode="train_phase", chunk=t, donate=donate
+            )[0]
+
+        dt_base, st_ref = _time_fresh(run_single, make, iters)
+        beta_ref = np.asarray(st_ref.elm.beta)
+        del st_ref
+        dt_don, st_don = _time_fresh(
+            lambda st: run_single(st, donate=True), make, iters)
+        assert np.array_equal(beta_ref, np.asarray(st_don.elm.beta)), (
+            f"S={s}: donated single-device run diverged")
+        del st_don
+
+        with sharding.activate(fleet_mesh):
+            def make_gspmd():
+                return engine.shard_fleet(engine.init_fleet(cfg, s), cfg)[0]
+
+            def run_gspmd(st):
+                return engine.run_fleet_sharded(
+                    st, xs, ys, cfg, mode="train_phase", chunk=t)[0]
+
+            dt_gspmd, st_g = _time_fresh(run_gspmd, make_gspmd, iters)
+            beta_g = np.asarray(jax.device_get(st_g.elm.beta))[:s]
+            assert np.array_equal(beta_ref, beta_g), f"S={s}: gspmd diverged"
+            del st_g, beta_g
+
+            def make_shards():
+                return engine.split_fleet(engine.init_fleet(cfg, s), cfg)
+
+            def run_shards(sh):
+                return engine.run_fleet_shards(
+                    sh, xs, ys, cfg, mode="train_phase", chunk=t)[0]
+
+            dt_shard, sh = _time_fresh(run_shards, make_shards, iters)
+            merged = engine.merge_fleet(sh)
+            assert np.array_equal(beta_ref, np.asarray(merged.elm.beta)), (
+                f"S={s}: shard-local blocked run diverged")
+            del sh, merged
+
+        row = {
+            "streams": s,
+            "ticks": t,
+            "devices": n_dev,
+            "block": DEFAULT_STREAM_BLOCK,
+            "n_hidden": N_HIDDEN,
+            "single_streams_per_s": steps / dt_base,
+            "single_donated_streams_per_s": steps / dt_don,
+            "gspmd_streams_per_s": steps / dt_gspmd,
+            "sharded_streams_per_s": steps / dt_shard,
+            "sharded_speedup_vs_single": dt_base / dt_shard,
+            "parity": "bitwise",
+        }
+        rows.append(row)
+        print(
+            f"S={s:6d} T={t}: single {row['single_streams_per_s']:>11,.0f} sps"
+            f" | donated {row['single_donated_streams_per_s']:>11,.0f}"
+            f" | gspmd {row['gspmd_streams_per_s']:>11,.0f}"
+            f" | sharded[{DEFAULT_STREAM_BLOCK}] "
+            f"{row['sharded_streams_per_s']:>11,.0f} sps "
+            f"({row['sharded_speedup_vs_single']:.1f}x, parity bitwise)"
+        )
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small sizes only")
+    ap.add_argument("--mesh", action="store_true",
+                    help="run the mega-fleet mesh scaling sweep instead "
+                    "(force host devices via XLA_FLAGS on CPU)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
-    if args.out is None:
-        name = "BENCH_fleet_quick.json" if args.quick else "BENCH_fleet.json"
-        args.out = str(pathlib.Path(__file__).resolve().parent.parent / name)
+    args.out = common.bench_out_path("fleet", args.quick, args.out)
+
+    if args.mesh:
+        mesh_rows = bench_mesh(args.quick)
+        out_path = pathlib.Path(args.out)
+        # Merge into the existing result so the standard rows survive.
+        out = (json.loads(out_path.read_text())
+               if out_path.exists() else {"bench": "fleet"})
+        out["backend"] = jax.default_backend()
+        out["mesh"] = {"devices": len(jax.devices()), "rows": mesh_rows}
+        out_path.write_text(json.dumps(out, indent=2) + "\n")
+        print(f"wrote {args.out}")
+        return mesh_rows
 
     sizes = [(64, 32), (1024, 16)] if not args.quick else [(64, 8)]
     rows = []
@@ -140,8 +275,11 @@ def main(argv=None):
             f"engine+kernel[{sk}] {k_sps:>10,.0f} sps"
         )
 
-    out = {"bench": "fleet", "backend": jax.default_backend(), "rows": rows}
-    pathlib.Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    out_path = pathlib.Path(args.out)
+    out = (json.loads(out_path.read_text())
+           if out_path.exists() else {})  # keep an existing "mesh" section
+    out.update({"bench": "fleet", "backend": jax.default_backend(), "rows": rows})
+    out_path.write_text(json.dumps(out, indent=2) + "\n")
     print(f"wrote {args.out}")
     return rows
 

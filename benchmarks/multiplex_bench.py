@@ -22,8 +22,8 @@ locked structurally by tests/test_cohort.py).  Best-of-N interleaved wall
 time (same protocol as stream_bench).
 
 Full mode sweeps N in {2, 4, 8, 16}; ``--quick`` is the CI smoke: 4
-same-shaped lossy tenants at S=16, fused, writing
-BENCH_multiplex_quick.json instead of BENCH_multiplex.json.
+same-shaped lossy tenants at S=16, fused, written to the bench artifact
+dir instead of the committed baseline (benchmarks.common.bench_out_path).
 
 Run:  PYTHONPATH=src python benchmarks/multiplex_bench.py [--quick]
 """
@@ -43,6 +43,11 @@ from repro import engine
 from repro.core import drift as drift_mod
 from repro.core import oselm, pruning
 from repro.engine import multiplex, stream
+
+try:
+    from benchmarks import common
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    import common
 
 N_IN, N_HIDDEN, N_OUT = 64, 64, 6
 
@@ -178,9 +183,7 @@ def main(argv=None):
                     choices=stream.BACKPRESSURE_POLICIES)
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
-    if args.out is None:
-        name = "BENCH_multiplex_quick.json" if args.quick else "BENCH_multiplex.json"
-        args.out = str(pathlib.Path(__file__).resolve().parent.parent / name)
+    args.out = common.bench_out_path("multiplex", args.quick, args.out)
 
     # (N tenants, S, T, teacher latency, loss) — quick is the CI smoke shape
     # (4 lossy tenants fused into one cohort); full sweeps the cohort sizes

@@ -23,8 +23,9 @@ fewer wire messages per applied label than per-tenant connections, at
 (server-side ask loss + reply jitter + client deadline) asserts every
 tenant's query accounting still reconciles exactly across batching.
 
-Writes BENCH_rpc.json next to the repo root (BENCH_rpc_quick.json with
-``--quick``: 2 tenants, S=16, the CI smoke).
+Writes BENCH_rpc.json next to the repo root (``--quick``: 2 tenants,
+S=16, the CI smoke — written to the bench artifact dir, not the committed
+baseline; see benchmarks.common.bench_out_path).
 
 Run:  PYTHONPATH=src python benchmarks/rpc_bench.py [--quick]
 """
@@ -44,6 +45,11 @@ from repro import engine
 from repro.core import drift as drift_mod
 from repro.core import oselm, pruning
 from repro.engine import multiplex, rpc, stream
+
+try:
+    from benchmarks import common
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    import common
 
 N_IN, N_HIDDEN, N_OUT = 64, 64, 6
 
@@ -146,9 +152,7 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
-    if args.out is None:
-        name = "BENCH_rpc_quick.json" if args.quick else "BENCH_rpc.json"
-        args.out = str(pathlib.Path(__file__).resolve().parent.parent / name)
+    args.out = common.bench_out_path("rpc", args.quick, args.out)
 
     tenant_counts = [2] if args.quick else [1, 2, 4]
     s, t = (16, 48) if args.quick else (64, 200)

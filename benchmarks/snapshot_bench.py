@@ -11,8 +11,9 @@ Measures, at S=512 (quick: S=16):
     handoff — which is the only time the tick loop actually stops.
 
 Acceptance (ISSUE 4): steady-state durable throughput within 5% of
-baseline at the 1k-tick cadence.  Writes BENCH_snapshot.json (quick:
-BENCH_snapshot_quick.json) next to the repo root.
+baseline at the 1k-tick cadence.  Writes BENCH_snapshot.json next to
+the repo root (``--quick`` writes to the bench artifact dir, not the
+committed baseline; see benchmarks.common.bench_out_path).
 
 Run:  PYTHONPATH=src python benchmarks/snapshot_bench.py [--quick]
 """
@@ -34,6 +35,11 @@ from repro.core import drift as drift_mod
 from repro.core import oselm, pruning
 from repro.engine import stream
 from repro.runtime.checkpoint import CheckpointManager
+
+try:
+    from benchmarks import common
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    import common
 
 N_IN, N_HIDDEN, N_OUT = 64, 64, 6
 
@@ -110,9 +116,7 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
-    if args.out is None:
-        name = "BENCH_snapshot_quick.json" if args.quick else "BENCH_snapshot.json"
-        args.out = str(pathlib.Path(__file__).resolve().parent.parent / name)
+    args.out = common.bench_out_path("snapshot", args.quick, args.out)
 
     s, t, cadence = (16, 256, 64) if args.quick else (512, 2500, 1000)
     cfg = _cfg()

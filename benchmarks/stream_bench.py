@@ -16,9 +16,21 @@ Measures stream-steps/second for T ticks of S concurrent ODL streams:
 Both sides report best-of-N wall time (the container's scheduling noise
 otherwise swamps the ~10% effect being measured).
 
-Writes BENCH_stream.json next to the repo root.
+``--mesh`` runs the mega-fleet comparison instead: solo ``stream.run``
+vs ``stream.run_sharded`` over the host's fleet mesh — one shard-local
+session (ring + teacher + dispatch) per device, labels learning back only
+into the shard that planned them.  The sharded state is asserted
+bit-for-bit against the solo run at equal S before throughput is
+recorded.  On CPU force devices first::
 
-Run:  PYTHONPATH=src python benchmarks/stream_bench.py [--quick]
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python benchmarks/stream_bench.py --mesh
+
+Writes BENCH_stream.json next to the repo root (``--mesh`` merges a
+``"mesh"`` section; ``--quick`` runs land in the bench artifact dir —
+see ``benchmarks.common.bench_out_path``).
+
+Run:  PYTHONPATH=src python benchmarks/stream_bench.py [--quick] [--mesh]
 """
 
 from __future__ import annotations
@@ -37,6 +49,11 @@ from repro import engine
 from repro.core import drift as drift_mod
 from repro.core import oselm, pruning
 from repro.engine import stream
+
+try:
+    from benchmarks import common
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    import common
 
 N_IN, N_HIDDEN, N_OUT = 64, 64, 6
 LATENCIES = (0, 4, 16)
@@ -117,14 +134,125 @@ def bench_pair(cfg, xs, ys, latency, iters=8):
     return best_fleet, best_stream, best_stats
 
 
+def _sharded_once(cfg, xs_host, ys, latency, fleet_mesh):
+    """One timed ``run_sharded`` pass over the fleet mesh: shard-local
+    LatencyTeachers answer from each shard's row window of ``ys``."""
+    from repro.distributed import sharding
+
+    t = len(xs_host)
+    s = xs_host[0].shape[0]
+    with sharding.activate(fleet_mesh):
+        n_shards = sharding.fleet_axis_size()
+        width = (s + (-s) % n_shards) // n_shards
+
+        def make_teacher(k):
+            lo = min(k * width, s)
+            hi = min(lo + width, s)
+            return stream.LatencyTeacher(
+                stream.array_labels(ys[:, lo:hi]), latency=latency
+            )
+
+        t0 = time.perf_counter()
+        state, _, stats_list = stream.run_sharded(
+            engine.init_fleet(cfg, s),
+            (xs_host[i] for i in range(t)),
+            cfg, make_teacher, mode="train_phase",
+            capacity=max(4 * latency, 8), collect=False,
+        )
+        jax.block_until_ready(jax.tree.leaves(state))
+        dt = time.perf_counter() - t0
+    return dt, state, stats_list
+
+
+def bench_mesh(quick: bool):
+    """Solo ``stream.run`` vs mesh-sharded ``stream.run_sharded`` —
+    interleaved best-of-N, sharded state asserted bitwise vs solo."""
+    from repro.launch import mesh as mesh_lib
+
+    fleet_mesh = mesh_lib.make_fleet_mesh()
+    n_dev = int(fleet_mesh.devices.size)
+    sizes = [(512, 8)] if quick else [(2048, 64), (8192, 32)]
+    iters = 2 if quick else 4
+    rows = []
+    print(f"== Mesh-sharded streaming runtime ({n_dev}-device fleet mesh, "
+          f"n_in={N_IN}, N={N_HIDDEN}) ==")
+    for s, t in sizes:
+        cfg = _cfg()
+        xs, ys = _data(t, s, cfg)
+        xs_host = [np.asarray(x) for x in np.asarray(xs)]
+        steps = t * s
+        print(f"S={s:5d} T={t:3d}:")
+        for lat in (0, 4):
+            # Warmup both sides (compiles) + the parity lock: same ticks,
+            # same deterministic lossless teacher, equal S -> the merged
+            # sharded state must be bit-for-bit the solo one.
+            _, solo_stats = _stream_once(cfg, xs_host, ys, lat)
+            solo_state, _, _ = stream.run(
+                engine.init_fleet(cfg, s), (x for x in xs_host), cfg,
+                stream.LatencyTeacher(stream.array_labels(ys), latency=lat),
+                mode="train_phase", capacity=max(4 * lat, 8), collect=False,
+            )
+            _, sharded_state, stats_list = _sharded_once(
+                cfg, xs_host, ys, lat, fleet_mesh)
+            assert np.array_equal(
+                np.asarray(solo_state.elm.beta),
+                np.asarray(sharded_state.elm.beta),
+            ), f"S={s} lat={lat}: sharded stream diverged from solo"
+            del solo_state, sharded_state
+
+            best_solo = best_sharded = float("inf")
+            gc.collect()
+            gc.disable()
+            try:
+                for _ in range(iters):
+                    dt, _ = _stream_once(cfg, xs_host, ys, lat)
+                    best_solo = min(best_solo, dt)
+                    dt, _, stats_list = _sharded_once(
+                        cfg, xs_host, ys, lat, fleet_mesh)
+                    best_sharded = min(best_sharded, dt)
+            finally:
+                gc.enable()
+            agg = stream.aggregate_stats(stats_list)
+            rows.append({
+                "streams": s,
+                "ticks": t,
+                "devices": n_dev,
+                "n_hidden": N_HIDDEN,
+                "teacher_latency_ticks": lat,
+                "solo_steps_per_s": steps / best_solo,
+                "sharded_steps_per_s": steps / best_sharded,
+                "sharded_vs_solo": best_solo / best_sharded,
+                "labels_applied": agg["labels_applied"],
+                "queries_issued": agg["queries_issued"],
+                "parity": "bitwise",
+            })
+            print(f"  lat={lat:2d}: solo {steps / best_solo:>11,.0f} sps | "
+                  f"sharded {steps / best_sharded:>11,.0f} sps "
+                  f"({best_solo / best_sharded:.2f}x, parity bitwise) | "
+                  f"labels {agg['labels_applied']}/{agg['queries_issued']}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small sizes only (CI smoke)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="solo vs mesh-sharded streaming sweep instead "
+                    "(force host devices via XLA_FLAGS on CPU)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
-    if args.out is None:
-        name = "BENCH_stream_quick.json" if args.quick else "BENCH_stream.json"
-        args.out = str(pathlib.Path(__file__).resolve().parent.parent / name)
+    args.out = common.bench_out_path("stream", args.quick, args.out)
+
+    if args.mesh:
+        mesh_rows = bench_mesh(args.quick)
+        out_path = pathlib.Path(args.out)
+        out = (json.loads(out_path.read_text())
+               if out_path.exists() else {"bench": "stream"})
+        out["backend"] = jax.default_backend()
+        out["mesh"] = {"devices": len(jax.devices()), "rows": mesh_rows}
+        out_path.write_text(json.dumps(out, indent=2) + "\n")
+        print(f"wrote {args.out}")
+        return mesh_rows
 
     sizes = [(64, 64)] if args.quick else [(1024, 128)]
     rows = []
@@ -158,8 +286,11 @@ def main(argv=None):
                   f"tick p50/p95 {stats.tick_p50_ms:.2f}/{stats.tick_p95_ms:.2f} ms | "
                   f"labels {stats.labels_applied}/{stats.queries_issued}")
 
-    out = {"bench": "stream", "backend": jax.default_backend(), "rows": rows}
-    pathlib.Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    out_path = pathlib.Path(args.out)
+    out = (json.loads(out_path.read_text())
+           if out_path.exists() else {})  # keep an existing "mesh" section
+    out.update({"bench": "stream", "backend": jax.default_backend(), "rows": rows})
+    out_path.write_text(json.dumps(out, indent=2) + "\n")
     print(f"wrote {args.out}")
     return rows
 

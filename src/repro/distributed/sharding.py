@@ -9,7 +9,9 @@ Default rule set (DESIGN.md §3):
   batch   -> ("pod", "data")     data parallel over pods x data axis
   heads/kv_heads/mlp/experts/vocab -> "model"   tensor/expert parallel
   seq_sp  -> "model"             sequence parallel (Megatron-SP regions)
-  stream  -> ("pod", "data")     ODL fleet heads ride the data axis
+  stream  -> ("fleet", "pod", "data")   ODL fleet heads; a dedicated
+            1-D ``fleet`` mesh (launch.mesh.make_fleet_mesh) takes the
+            whole axis, and on LLM meshes it rides the data axis
 
 Use ``activate(mesh, rules)`` as a context manager; ``constrain`` is an
 identity outside it.
@@ -28,7 +30,7 @@ _state = threading.local()
 
 DEFAULT_RULES: dict[str, object] = {
     "batch": ("pod", "data"),
-    "stream": ("pod", "data"),
+    "stream": ("fleet", "pod", "data"),
     "seq": None,
     "seq_sp": "model",  # sequence-parallel regions (hillclimb variant)
     "seq_kv": "model",  # decode KV/latent cache length (flash-decoding style)
@@ -64,6 +66,21 @@ def activate(mesh: Mesh, rules: Optional[dict] = None):
     try:
         with mesh:
             yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+@contextlib.contextmanager
+def deactivate():
+    """Temporarily disable sharding constraints inside an ``activate``
+    scope.  For shard-*local* dispatch regions (e.g. a mesh-sharded
+    stream session's per-shard plan/learn calls, each pinned to one
+    device): under the enclosing mesh ``constrain`` would demand the
+    full device set for single-device operands."""
+    prev = _current()
+    _state.mesh, _state.rules = None, DEFAULT_RULES
+    try:
+        yield
     finally:
         _state.mesh, _state.rules = prev
 
@@ -166,6 +183,25 @@ def ensure_model_sharded(spec: P, shape: tuple) -> P:
 
 def mesh_or_none() -> Optional[Mesh]:
     return _current()[0]
+
+
+def fleet_axis_size() -> int:
+    """Number of shards the ``stream`` rule resolves to under the active
+    mesh: the product of the mesh-axis sizes that would split an (evenly
+    divisible) fleet's leading axis.  1 with no mesh active — callers use
+    this to size stream-axis padding before ``device_put``."""
+    mesh, rules = _current()
+    if mesh is None:
+        return 1
+    target = rules.get("stream", None)
+    if target is None:
+        return 1
+    parts = (target,) if isinstance(target, str) else tuple(target)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for p in parts:
+        n *= mesh_shape.get(p, 1)
+    return n
 
 
 def shard_map(f, mesh, in_specs, out_specs, check=False):

@@ -147,6 +147,7 @@ multiplexer).  ``launch/serve.py`` exposes all of it
 from repro.engine.fleet import (  # noqa: F401
     EngineConfig,
     EngineState,
+    FleetShards,
     FleetStepOutput,
     GateOutput,
     PlanOutput,
@@ -158,9 +159,15 @@ from repro.engine.fleet import (  # noqa: F401
     init_fleet,
     init_state,
     learn,
+    merge_fleet,
+    pad_streams,
     plan,
     run_fleet,
+    run_fleet_sharded,
+    run_fleet_shards,
     runner_cache_info,
+    shard_fleet,
+    split_fleet,
     stream_slice,
 )
 

@@ -388,7 +388,15 @@ def run_fleet(
     """Run T ticks of S streams through the engine, ``chunk`` ticks per
     dispatch.  Returns (final state, outputs stacked over (T, S)).
 
-    ``donate`` defaults to True off-CPU (CPU ignores donation and warns).
+    ``donate`` defaults to True off-CPU.  On CPU it defaults to False so
+    ad-hoc callers may keep using the input state after the call — but CPU
+    donation *does* alias buffers in-place (no copy, no warning), and at
+    mega-fleet sizes the non-donated path is dominated by page-zeroing
+    churn on the ~16 KB/stream P re-allocation (sys-time, not compute).
+    Resident callers that own their state (``run_fleet_sharded``,
+    ``run_fleet_shards``, the streaming runtime) pass ``donate=True``
+    explicitly and get ~2.7x on CPU at S=65,536.
+
     When T is a multiple of ``chunk`` every dispatch hits the same compiled
     executable; a ragged final chunk costs exactly one extra compile.
     """
@@ -547,3 +555,258 @@ def apply_labels(
     return sharding.constrain_fleet(
         state._replace(elm=new_elm, prune=new_prune)
     )
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded fleets: the stream axis over a ("fleet",) device mesh.
+# ---------------------------------------------------------------------------
+#
+# Every per-stream op above is elementwise or einsum-batched over S with all
+# contractions on unsharded dims (n_in / n_hidden), so splitting the stream
+# axis — whether by GSPMD partitioning one dispatch (``shard_fleet`` +
+# ``run_fleet_sharded``) or by explicit per-shard dispatches
+# (``split_fleet`` + ``run_fleet_shards``) — is bit-for-bit the unsharded
+# run row-for-row, with zero cross-shard communication on the hot path
+# (locked by tests/test_mesh_fleet.py).
+
+# Streams per block for the explicit shard-local path: P is ~16 KB/stream,
+# so 512-stream blocks keep each block's working set (~8 MB of P) inside a
+# host L3 across the whole T-tick scan instead of streaming GBs per tick.
+DEFAULT_STREAM_BLOCK = 512
+
+
+def pad_streams(state: EngineState, cfg: EngineConfig, n_pad: int) -> EngineState:
+    """Append ``n_pad`` fresh-init dead rows to a fleet (padding S up to a
+    multiple of the shard count).  Dead rows are driven with
+    ``teacher_available=False`` so they never query or learn; callers meter
+    them (bench/stream stats report ``padded_streams``) and strip their
+    rows from outputs."""
+    if n_pad <= 0:
+        return state
+    return stack_streams([state, init_fleet(cfg, n_pad)])
+
+
+def shard_fleet(
+    state: EngineState, cfg: EngineConfig, mesh=None
+) -> tuple[EngineState, int]:
+    """GSPMD placement: pad S to a multiple of the mesh's fleet-axis size
+    and ``device_put`` every leaf with a ``NamedSharding`` splitting its
+    leading axis over the ``stream`` rule.  Returns ``(placed_state,
+    n_pad)``.  Identity (and ``n_pad=0``) with no mesh.
+
+    The placed state is meant to stay *resident*: advance it with
+    ``run_fleet_sharded`` (donated dispatches keep P/beta updating in place
+    per shard) and only pull it off the mesh at checkpoint time.
+    """
+    if mesh is not None and mesh is not sharding.mesh_or_none():
+        with sharding.activate(mesh):
+            return shard_fleet(state, cfg)
+    if sharding.mesh_or_none() is None:
+        return state, 0
+    n_shards = sharding.fleet_axis_size()
+    s = jax.tree.leaves(state)[0].shape[0]
+    n_pad = (-s) % n_shards
+    state = pad_streams(state, cfg, n_pad)
+    return (
+        jax.tree.map(
+            lambda a: jax.device_put(a, sharding.fleet_sharding(a.ndim, a.shape)),
+            state,
+        ),
+        n_pad,
+    )
+
+
+def run_fleet_sharded(
+    state: EngineState,  # shard_fleet-placed (possibly padded) fleet
+    xs: jnp.ndarray,  # (T, S_real, n_in)
+    labels: jnp.ndarray,  # (T, S_real) int32
+    cfg: EngineConfig,
+    mode: str = "algo1",
+    teacher_available: Optional[jnp.ndarray] = None,  # (T, S_real) bool
+    chunk: Optional[int] = None,
+) -> tuple[EngineState, FleetStepOutput]:
+    """Advance a ``shard_fleet``-placed fleet by donated full-width
+    dispatches; XLA partitions each dispatch over the mesh (state stays
+    resident per shard, inputs are staged with matching shardings so no
+    resharding happens inside the step).  Inputs are in *real* (unpadded)
+    width: dead rows are appended here with ``teacher_available=False`` and
+    stripped from the returned outputs, so callers never see padding.
+    """
+    s_pad = jax.tree.leaves(state)[0].shape[0]
+    t, s_real = xs.shape[0], xs.shape[1]
+    if teacher_available is None:
+        teacher_available = jnp.ones((t, s_real), jnp.bool_)
+    if s_pad != s_real:
+        pad = s_pad - s_real
+        if pad < 0:
+            raise ValueError(f"state has {s_pad} streams < input width {s_real}")
+        xs = jnp.concatenate(
+            [xs, jnp.zeros((t, pad) + xs.shape[2:], xs.dtype)], axis=1
+        )
+        labels = jnp.concatenate([labels, jnp.zeros((t, pad), labels.dtype)], axis=1)
+        teacher_available = jnp.concatenate(
+            [teacher_available, jnp.zeros((t, pad), jnp.bool_)], axis=1
+        )
+    if sharding.mesh_or_none() is not None:
+
+        def put(a):
+            ns = sharding.named_sharding(
+                None, "stream", *((None,) * (a.ndim - 2)), shape=a.shape
+            )
+            return jax.device_put(a, ns)
+
+        xs, labels = put(xs), put(labels)
+        teacher_available = put(teacher_available)
+    state, out = run_fleet(
+        state, xs, labels, cfg, mode=mode,
+        teacher_available=teacher_available, chunk=chunk, donate=True,
+    )
+    if s_pad != s_real:
+        out = jax.tree.map(lambda a: a[:, :s_real], out)
+    return state, out
+
+
+class FleetShards(NamedTuple):
+    """Explicit shard-local layout: the fleet split into per-block states,
+    shard k's blocks resident on mesh device k.
+
+    Where ``shard_fleet`` hands one logical array to GSPMD, this layout
+    makes the no-communication structure literal — each block is advanced
+    by its own donated block-width dispatch, so a shard's P/beta never
+    leave its device and (on cache-starved hosts) each block's working set
+    stays L3-resident across the T-tick scan.  The streaming runtime's
+    per-shard pending rings (``stream.ShardedStreamSession``) use the same
+    row partition.
+    """
+
+    states: tuple  # per-block EngineState, block b on its shard's device
+    bounds: tuple  # per-block (lo, hi) row window in the padded fleet
+    n_pad: int  # dead rows appended to the tail (never surfaced in outputs)
+
+
+def split_fleet(
+    state: EngineState,
+    cfg: EngineConfig,
+    n_shards: Optional[int] = None,
+    block: Optional[int] = None,
+    devices=None,
+) -> FleetShards:
+    """Split a fleet into ``FleetShards``: pad S to a multiple of
+    ``n_shards`` (default: the active mesh's fleet-axis size, 1 with no
+    mesh), sub-divide each shard into ``block``-stream blocks (default
+    ``DEFAULT_STREAM_BLOCK``, capped at the shard width), and place shard
+    k's blocks on ``devices[k]`` (default: the active mesh's devices, else
+    everything stays on the default device)."""
+    if n_shards is None:
+        n_shards = sharding.fleet_axis_size()
+    if devices is None:
+        mesh = sharding.mesh_or_none()
+        if mesh is not None:
+            devices = list(mesh.devices.flat)
+    if devices is not None and len(devices) < n_shards:
+        raise ValueError(f"{n_shards} shards > {len(devices)} devices")
+    s = jax.tree.leaves(state)[0].shape[0]
+    n_pad = (-s) % n_shards
+    state = pad_streams(state, cfg, n_pad)
+    width = (s + n_pad) // n_shards
+    if block is None:
+        block = DEFAULT_STREAM_BLOCK
+    block = max(1, min(block, width))
+    states, bounds = [], []
+    for k in range(n_shards):
+        dev = devices[k] if devices is not None else None
+        lo = k * width
+        while lo < (k + 1) * width:
+            hi = min(lo + block, (k + 1) * width)
+            sub = slice_streams(state, lo, hi)
+            if dev is not None:
+                sub = jax.device_put(sub, dev)
+            states.append(sub)
+            bounds.append((lo, hi))
+            lo = hi
+    return FleetShards(states=tuple(states), bounds=tuple(bounds), n_pad=n_pad)
+
+
+def merge_fleet(shards: FleetShards) -> EngineState:
+    """Reassemble one host-side fleet from shard-local blocks, stripping
+    the dead-row padding (checkpoint/inspection path — the hot path never
+    gathers)."""
+    full = stack_streams([jax.device_get(st) for st in shards.states])
+    s = jax.tree.leaves(full)[0].shape[0]
+    if shards.n_pad:
+        full = slice_streams(full, 0, s - shards.n_pad)
+    return full
+
+
+def run_fleet_shards(
+    shards: FleetShards,
+    xs: jnp.ndarray,  # (T, S_real, n_in)
+    labels: jnp.ndarray,  # (T, S_real) int32
+    cfg: EngineConfig,
+    mode: str = "algo1",
+    teacher_available: Optional[jnp.ndarray] = None,  # (T, S_real) bool
+    chunk: Optional[int] = None,
+) -> tuple[FleetShards, FleetStepOutput]:
+    """Advance every block of a ``FleetShards`` by shard-local donated
+    dispatches and restitch the outputs in row order.  Bit-for-bit the
+    unsharded ``run_fleet`` at equal S (row independence — see the module
+    banner); dead tail rows run with ``teacher_available=False`` and are
+    stripped from the outputs.
+
+    Block dispatches are shard-LOCAL (each block's state lives on one
+    device), so the whole loop runs under ``sharding.deactivate()`` — a
+    caller's multi-device mesh scope must not leak in, or the step's
+    ``constrain_fleet`` would demand the full device set for
+    single-device operands."""
+    t, s_real = xs.shape[0], xs.shape[1]
+    if teacher_available is None:
+        teacher_available = jnp.ones((t, s_real), jnp.bool_)
+    with sharding.deactivate():
+        return _run_fleet_shards_body(
+            shards, xs, labels, cfg, mode, teacher_available, chunk)
+
+
+def _run_fleet_shards_body(
+    shards, xs, labels, cfg, mode, teacher_available, chunk
+) -> tuple[FleetShards, FleetStepOutput]:
+    t, s_real = xs.shape[0], xs.shape[1]
+    new_states, outs = [], []
+    for st, (lo, hi) in zip(shards.states, shards.bounds):
+        dev = None
+        leaf = jax.tree.leaves(st)[0]
+        if hasattr(leaf, "devices"):
+            (dev,) = leaf.devices()
+        real_hi = max(lo, min(hi, s_real))  # block may sit wholly in padding
+        n_dead = hi - real_hi
+        x_b = xs[:, lo:real_hi]
+        lab_b = labels[:, lo:real_hi]
+        av_b = teacher_available[:, lo:real_hi]
+        if n_dead:
+            x_b = jnp.concatenate(
+                [x_b, jnp.zeros((t, n_dead) + xs.shape[2:], xs.dtype)], axis=1
+            )
+            lab_b = jnp.concatenate(
+                [lab_b, jnp.zeros((t, n_dead), labels.dtype)], axis=1
+            )
+            av_b = jnp.concatenate(
+                [av_b, jnp.zeros((t, n_dead), jnp.bool_)], axis=1
+            )
+        if dev is not None:
+            x_b, lab_b, av_b = (
+                jax.device_put(x_b, dev),
+                jax.device_put(lab_b, dev),
+                jax.device_put(av_b, dev),
+            )
+        st, out = run_fleet(
+            st, x_b, lab_b, cfg, mode=mode,
+            teacher_available=av_b, chunk=chunk, donate=True,
+        )
+        if n_dead:
+            keep = out.pred.shape[1] - n_dead
+            out = jax.tree.map(lambda a: a[:, :keep], out)
+        new_states.append(st)
+        outs.append(out)
+    merged = jax.tree.map(
+        lambda *a: jnp.concatenate([jax.device_get(x) for x in a], axis=1), *outs
+    )
+    return shards._replace(states=tuple(new_states)), merged

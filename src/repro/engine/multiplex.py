@@ -131,6 +131,7 @@ def shared_rpc_teachers(
     secret: Optional[str] = None,
     batch_window_s: Optional[float] = None,
     batch_max: Optional[int] = None,
+    compress: bool = False,
 ):
     """Per-tenant teachers over shared batched RPC connections.
 
@@ -159,6 +160,7 @@ def shared_rpc_teachers(
                     host, int(port), timeout_s=timeout_s,
                     connect_timeout_s=connect_timeout_s, secret=secret,
                     batch_window_s=batch_window_s, batch_max=batch_max,
+                    compress=compress,
                 )
             teachers.append(client.tenant(name=f"tenant{i}"))
     except BaseException:

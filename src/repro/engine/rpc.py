@@ -49,6 +49,16 @@ its own format:
   version byte 0x02 can never begin a JSON line, so a server (or reader)
   distinguishes the formats from the first byte of each message.
 
+* **zlib envelope (optional, ``compress=True`` / ``--teacher-compress``)**:
+  ``[0x03] [4 bytes LE compressed length] [zlib stream]`` whose
+  decompressed bytes are one complete v2 frame.  The framing layer
+  unwraps it transparently; the server answers a compressed request with
+  a compressed reply (in kind) and meters the win
+  (``frames_compressed``, ``compressed_bytes_in/out`` vs
+  ``raw_bytes_in/out``).  With a secret, the grant is negotiated in the
+  HMAC handshake (``"compress": "zlib"`` on the auth line, echoed in
+  ``auth_ok``) so an older server is never sent a byte it can't parse.
+
 Authentication (``secret=...`` / ``--secret``): a *mutual* shared-secret
 HMAC challenge–response on connect, always in newline-JSON (it precedes
 any framed traffic).  The server opens every connection with
@@ -92,6 +102,7 @@ import subprocess
 import sys
 import threading
 import time
+import zlib
 from typing import Optional
 
 import numpy as np
@@ -102,6 +113,21 @@ from repro.engine.stream import TeacherReply
 # so the two wire formats coexist on one connection.
 WIRE_V2 = 0x02
 _WIRE_V2_BYTE = bytes([WIRE_V2])
+
+# Compressed envelope: [0x03][4 bytes LE compressed length][zlib stream]
+# where the decompressed bytes are one complete v2 frame.  ``_iter_wire``
+# unwraps it transparently, so everything downstream of the framing layer
+# (codec, server, reader threads) sees plain v2 messages.  Negotiated in
+# the HMAC handshake when a secret is set (``"compress": "zlib"`` in the
+# client's auth line, echoed in ``auth_ok``); without a secret a client
+# configured with ``compress=True`` just sends envelopes and the server
+# answers each compressed request in kind.
+WIRE_V3_ZLIB = 0x03
+_WIRE_V3_BYTE = bytes([WIRE_V3_ZLIB])
+
+# Speed over ratio: the payloads are float32 feature blocks produced at
+# tick rate, so the codec sits on the hot path of every ask.
+ZLIB_LEVEL = 1
 
 WIRE_FORMATS = ("v1", "v2")
 
@@ -144,6 +170,12 @@ def _encode_frame(header: dict, payload: bytes = b"") -> bytes:
     return _WIRE_V2_BYTE + len(hdr).to_bytes(4, "little") + hdr + payload
 
 
+def _compress_frame(frame: bytes) -> bytes:
+    """Wrap one complete v2 frame in a zlib envelope (wire byte 0x03)."""
+    z = zlib.compress(frame, ZLIB_LEVEL)
+    return _WIRE_V3_BYTE + len(z).to_bytes(4, "little") + z
+
+
 def _read_exact(f, n: int) -> bytes:
     buf = f.read(n)
     if buf is None or len(buf) != n:
@@ -157,16 +189,36 @@ def _iter_wire(f):
 
     Yields ``("v2", header, payload)`` for binary frames and
     ``("v1", obj_or_None, raw_line)`` for JSON lines (``None`` when the
-    line does not parse).  Ends cleanly on EOF *between* messages; raises
-    ``EOFError`` (or ``ValueError`` for a corrupt header) when the stream
-    dies *inside* a frame — a torn frame desynchronizes everything after
-    it, so the caller must drop the connection.
+    line does not parse).  A zlib envelope (0x03) is unwrapped here and
+    yielded as the v2 frame it contains, with ``header["_z"] =
+    (wire_bytes, raw_bytes)`` so the server can meter compression and
+    answer in kind.  Ends cleanly on EOF *between* messages; raises
+    ``EOFError`` (or ``ValueError`` for a corrupt header / envelope) when
+    the stream dies *inside* a frame — a torn frame desynchronizes
+    everything after it, so the caller must drop the connection.
     """
     while True:
         b = f.read(1)
         if not b:
             return
-        if b[0] == WIRE_V2:
+        if b[0] == WIRE_V3_ZLIB:
+            zlen = int.from_bytes(_read_exact(f, 4), "little")
+            try:
+                inner = zlib.decompress(_read_exact(f, zlen))
+            except zlib.error as e:
+                raise ValueError(f"corrupt zlib envelope: {e}") from e
+            if not inner or inner[0] != WIRE_V2:
+                raise ValueError("zlib envelope does not contain a v2 frame")
+            hlen = int.from_bytes(inner[1:5], "little")
+            header = json.loads(inner[5 : 5 + hlen].decode())
+            if not isinstance(header, dict):
+                raise ValueError(f"v2 frame header is not an object: {header!r}")
+            payload = inner[5 + hlen :]
+            if len(payload) != int(header.get("payload_len", 0)):
+                raise ValueError("zlib envelope payload length mismatch")
+            header["_z"] = (5 + zlen, len(inner))
+            yield "v2", header, payload
+        elif b[0] == WIRE_V2:
             hlen = int.from_bytes(_read_exact(f, 4), "little")
             header = json.loads(_read_exact(f, hlen).decode())
             if not isinstance(header, dict):
@@ -278,6 +330,14 @@ class LabelServer:
         self.frames_v2 = 0  # v2 request frames served (1 frame : N asks)
         self.asks_served = 0  # individual asks across both formats
         self.frame_errors = 0  # undecodable lines / torn v2 frames
+        # Compression metering (zlib envelopes, both directions): wire
+        # bytes actually moved vs the raw v2 bytes they stand for — the
+        # transport-compression win is raw/compressed.
+        self.frames_compressed = 0  # compressed request frames served
+        self.compressed_bytes_in = 0  # wire bytes of compressed requests
+        self.raw_bytes_in = 0  # their decompressed v2 sizes
+        self.compressed_bytes_out = 0  # wire bytes of compressed replies
+        self.raw_bytes_out = 0  # their raw v2 sizes
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -375,6 +435,7 @@ class LabelServer:
                 if kind == "v2":
                     if not isinstance(obj, dict) or obj.get("kind") != "ask":
                         continue
+                    z = obj.pop("_z", None)
                     try:
                         asks = decode_asks(obj, payload)
                     except (KeyError, TypeError, ValueError):
@@ -385,6 +446,16 @@ class LabelServer:
                         (t, mask, labels)
                         for t, mask, labels in self._answer(asks, rng)
                     )
+                    if z is not None:
+                        # Answer a compressed request in kind and meter
+                        # both directions of the compression win.
+                        self._count("frames_compressed")
+                        self._count("compressed_bytes_in", by=z[0])
+                        self._count("raw_bytes_in", by=z[1])
+                        raw_len = len(out)
+                        out = _compress_frame(out)
+                        self._count("compressed_bytes_out", by=len(out))
+                        self._count("raw_bytes_out", by=raw_len)
                 else:
                     if obj is None or not isinstance(obj, dict):
                         self._count("frame_errors")
@@ -462,10 +533,13 @@ class LabelServer:
             str(reply.get("auth", "")), _digest(self.secret, challenge)
         ):
             return False
+        ok = {"auth_ok": _digest(self.secret, str(reply.get("nonce", "")))}
+        if reply.get("compress") == "zlib":
+            # Compression negotiation rides the handshake: echo the
+            # client's request so it knows zlib envelopes are understood.
+            ok["compress"] = "zlib"
         try:
-            f.write((json.dumps(
-                {"auth_ok": _digest(self.secret, str(reply.get("nonce", "")))}
-            ) + "\n").encode())
+            f.write((json.dumps(ok) + "\n").encode())
             f.flush()
         except OSError:
             return False
@@ -477,10 +551,13 @@ class LabelServer:
 # ---------------------------------------------------------------------------
 
 
-def _authenticate(sock: socket.socket, wfile, secret: str) -> None:
+def _authenticate(sock: socket.socket, wfile, secret: str,
+                  compress: bool = False) -> bool:
     """Client half of the mutual HMAC handshake (see module docstring).
     Raises ``ConnectionError`` (after closing the socket) unless BOTH ends
-    prove knowledge of the secret."""
+    prove knowledge of the secret.  ``compress=True`` rides a
+    ``"compress": "zlib"`` request on the auth line; the return value is
+    whether the server echoed the grant (older servers simply don't)."""
     with sock.makefile("rb") as rf:
         try:
             hello = json.loads(rf.readline())
@@ -494,10 +571,13 @@ def _authenticate(sock: socket.socket, wfile, secret: str) -> None:
                 "unauthenticated connection"
             )
         nonce = secrets_mod.token_hex(16)
-        wfile.write((json.dumps({
+        auth_line = {
             "auth": _digest(secret, hello["challenge"]),
             "nonce": nonce,
-        }) + "\n").encode())
+        }
+        if compress:
+            auth_line["compress"] = "zlib"
+        wfile.write((json.dumps(auth_line) + "\n").encode())
         wfile.flush()
         try:
             proof = json.loads(rf.readline())
@@ -512,6 +592,7 @@ def _authenticate(sock: socket.socket, wfile, secret: str) -> None:
             "label server failed to prove knowledge of the shared "
             "secret; refusing to train on its labels"
         )
+    return bool(compress and proof.get("compress") == "zlib")
 
 
 class _WireConnection:
@@ -524,12 +605,19 @@ class _WireConnection:
     (the callers map the silence to timeout → loss)."""
 
     def __init__(self, host: str, port: int, connect_timeout_s: float,
-                 secret: Optional[str]):
+                 secret: Optional[str], compress: bool = False):
         self.sock = socket.create_connection((host, port),
                                              timeout=connect_timeout_s)
         self.wfile = self.sock.makefile("wb")
+        # With a handshake, compression is negotiated (an older server
+        # that doesn't echo the grant never sees a 0x03 byte); without
+        # one there is no negotiation channel, so the caller's request is
+        # taken at face value — the server answers envelopes in kind.
         if secret is not None:
-            _authenticate(self.sock, self.wfile, secret)
+            self.compress_granted = _authenticate(
+                self.sock, self.wfile, secret, compress=compress)
+        else:
+            self.compress_granted = bool(compress)
         # connect_timeout_s governed the dial (and the auth readline);
         # steady-state reads must block indefinitely — reply deadlines are
         # enforced per ticket, not by a socket idle timeout.
@@ -628,15 +716,20 @@ class RpcTeacher:
 
     def __init__(self, host: str, port: int, timeout_s: float = 5.0,
                  connect_timeout_s: float = 5.0, secret: Optional[str] = None,
-                 wire: str = "v2"):
+                 wire: str = "v2", compress: bool = False):
         if wire not in WIRE_FORMATS:
             raise ValueError(f"unknown wire format {wire!r}; choose {WIRE_FORMATS}")
+        if compress and wire != "v2":
+            raise ValueError(
+                "compress=True requires the v2 wire format (zlib envelopes "
+                "carry v2 frames; v1 newline-JSON has no framing to wrap)")
         self.timeout_s = timeout_s
         self.wire = wire
         # Authentication (when configured) happens inside the connection
         # constructor, synchronously, before the reader thread owns the
         # socket.
-        self._conn = _WireConnection(host, port, connect_timeout_s, secret)
+        self._conn = _WireConnection(host, port, connect_timeout_s, secret,
+                                     compress=compress)
         self._lock = threading.Lock()  # pending map + inbox
         self._next_ticket = 0
         # ticket -> wall deadline; present == still in flight.
@@ -685,6 +778,8 @@ class RpcTeacher:
         if self.wire == "v2":
             data = encode_asks([(ticket, int(tick), mask_np,
                                  np.asarray(feats, np.float32))])
+            if self._conn.compress_granted:
+                data = _compress_frame(data)
         else:
             data = (json.dumps({
                 "ticket": ticket,
@@ -796,7 +891,7 @@ class BatchedRpcClient:
     def __init__(self, host: str, port: int, timeout_s: float = 5.0,
                  connect_timeout_s: float = 5.0, secret: Optional[str] = None,
                  batch_window_s: float = DEFAULT_BATCH_WINDOW_S,
-                 batch_max: int = DEFAULT_BATCH_MAX):
+                 batch_max: int = DEFAULT_BATCH_MAX, compress: bool = False):
         if batch_max < 1:
             raise ValueError(f"batch_max must be >= 1, got {batch_max}")
         self.timeout_s = timeout_s
@@ -806,9 +901,11 @@ class BatchedRpcClient:
         self._host, self._port = host, int(port)
         self._connect_timeout_s = connect_timeout_s
         self._secret = secret
+        self._compress = bool(compress)
         # The write lock + HMAC handshake live in the connection — once
         # per connection, i.e. once per teacher host, not once per tenant.
-        self._conn = _WireConnection(host, port, connect_timeout_s, secret)
+        self._conn = _WireConnection(host, port, connect_timeout_s, secret,
+                                     compress=compress)
         self._cond = threading.Condition()  # queue + pending + inboxes
         self._closed = False
         self._next_ticket = 0
@@ -931,9 +1028,18 @@ class BatchedRpcClient:
             # stay pending until their deadlines, then map to loss.
             self._reconnect_and_reask()
             return
-        if self._conn.send(encode_asks(batch)):
+        if self._conn.send(self._frame(batch)):
             with self._cond:
                 self.asks_sent += len(batch)
+
+    def _frame(self, batch) -> bytes:
+        data = encode_asks(batch)
+        # Read the grant off the *current* connection: a reconnect
+        # renegotiates, and an older server may refuse what the original
+        # connection had granted.
+        if self._conn.compress_granted:
+            data = _compress_frame(data)
+        return data
 
     def _reconnect_and_reask(self) -> None:
         with self._reconnect_lock:
@@ -946,7 +1052,8 @@ class BatchedRpcClient:
             self._reconnect_spent = True
             try:
                 conn = _WireConnection(self._host, self._port,
-                                       self._connect_timeout_s, self._secret)
+                                       self._connect_timeout_s, self._secret,
+                                       compress=self._compress)
             except OSError:
                 return
             old, self._conn = self._conn, conn
@@ -972,7 +1079,7 @@ class BatchedRpcClient:
                 ]
             for i in range(0, len(resend), self.batch_max):
                 chunk = resend[i:i + self.batch_max]
-                if self._conn.send(encode_asks(chunk)):
+                if self._conn.send(self._frame(chunk)):
                     with self._cond:
                         self.asks_sent += len(chunk)
                         self.asks_reasked += len(chunk)
@@ -1094,6 +1201,28 @@ def _selftest() -> int:
             assert rb and rb[0].labels.tolist() == want, "batched tenant b"
             assert client.wire_messages == 1 and client.asks_sent == 2, (
                 client.wire_messages, client.asks_sent)
+    # Compressed envelopes against an in-process server (for counter
+    # access): answered in kind, metered, and byte-identical labels.
+    # A wide tick so the win is unambiguous (real feature payloads
+    # dominate the frame, exactly the bytes zlib earns its keep on).
+    s_z = 64
+    feats_z = np.zeros((s_z, 8), np.float32)
+    want_z = [expected_label(3, i, n_out) for i in range(s_z)]
+    server = LabelServer(port=0, n_out=n_out).start()
+    try:
+        with RpcTeacher("127.0.0.1", server.port, timeout_s=10.0,
+                        compress=True) as teacher:
+            ticket = teacher.ask(feats_z, np.ones((s_z,), bool), tick=3)
+            replies = drain(teacher)
+            assert replies and replies[0].ticket == ticket, "no zlib reply"
+            assert replies[0].labels.tolist() == want_z, replies[0].labels
+        assert server.frames_compressed == 1, server.frames_compressed
+        assert server.raw_bytes_in > server.compressed_bytes_in > 0, (
+            server.raw_bytes_in, server.compressed_bytes_in)
+        assert server.raw_bytes_out >= server.compressed_bytes_out > 0, (
+            server.raw_bytes_out, server.compressed_bytes_out)
+    finally:
+        server.close()
     with loopback_server(n_out=n_out, secret="s3cr3t") as (host, port):
         ticket, replies = roundtrip(host, port, secret="s3cr3t")
         assert replies and replies[0].labels.tolist() == want, "auth roundtrip"
@@ -1101,7 +1230,7 @@ def _selftest() -> int:
         # times out into loss and no label ever arrives.
         _, replies = roundtrip(host, port, secret=None, timeout_s=0.5)
         assert not replies, "unauthenticated client must receive nothing"
-    print("rpc selftest OK (v1 + v2 + batched + hmac + reject):", want)
+    print("rpc selftest OK (v1 + v2 + zlib + batched + hmac + reject):", want)
     return 0
 
 

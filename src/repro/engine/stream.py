@@ -81,6 +81,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding
 from repro.engine import fleet
 from repro.engine.types import EngineConfig, EngineState, FleetStepOutput
 
@@ -501,6 +502,45 @@ def _learn_plan_runner(cfg: EngineConfig, mode: str, donate: bool):
     return jax.jit(run_learn_plan, donate_argnums=(0, 1, 2, 3) if donate else ())
 
 
+@functools.lru_cache(maxsize=fleet.RUNNER_CACHE_SIZE)
+def _plan_avail_runner(cfg: EngineConfig, mode: str, donate: bool):
+    """``_plan_runner`` with an explicit ``teacher_available`` vector.
+
+    Used by sessions carrying dead padding rows (``live < S`` in a sharded
+    session's tail shard): padded rows plan with ``avail=False`` so they
+    never query, never learn, and never touch the teacher — while every
+    shard's dispatch keeps the same (padded) width and therefore shares one
+    compiled executable."""
+
+    def run_plan(elm, prune, drift, meter, x, avail):
+        state = EngineState(elm=elm, prune=prune, drift=drift, meter=meter)
+        new_state, p = fleet.plan(state, x, cfg, mode=mode, teacher_available=avail)
+        return (new_state.prune, new_state.drift, new_state.meter), p
+
+    return jax.jit(run_plan, donate_argnums=(1, 2, 3) if donate else ())
+
+
+@functools.lru_cache(maxsize=fleet.RUNNER_CACHE_SIZE)
+def _learn_plan_avail_runner(cfg: EngineConfig, mode: str, donate: bool):
+    """``_learn_plan_runner`` with an explicit ``teacher_available`` vector
+    for the planned next tick (see ``_plan_avail_runner``)."""
+
+    def run_learn_plan(
+        elm, prune, drift, meter, h, labels, pred, conf, mask, controller_on, theta,
+        x_next, avail
+    ):
+        state = EngineState(elm=elm, prune=prune, drift=drift, meter=meter)
+        state = fleet.learn(
+            state, h, labels, pred, conf, mask, controller_on, cfg, theta=theta
+        )
+        new_state, p = fleet.plan(
+            state, x_next, cfg, mode=mode, teacher_available=avail
+        )
+        return (new_state.elm, new_state.prune, new_state.drift, new_state.meter), p
+
+    return jax.jit(run_learn_plan, donate_argnums=(0, 1, 2, 3) if donate else ())
+
+
 def cache_stats() -> dict:
     """Hit/miss counters for every compiled-runner cache in the engine."""
     out = dict(fleet.runner_cache_info())
@@ -508,6 +548,8 @@ def cache_stats() -> dict:
         ("plan_runner", _plan_runner),
         ("learn_runner", _learn_runner),
         ("learn_plan_runner", _learn_plan_runner),
+        ("plan_avail_runner", _plan_avail_runner),
+        ("learn_plan_avail_runner", _learn_plan_avail_runner),
     ):
         info = fn.cache_info()
         out[name] = {
@@ -561,6 +603,7 @@ class StreamSession:
         donate: Optional[bool] = None,
         stats: Optional[StreamStats] = None,
         ship: Optional[Callable] = None,
+        live: Optional[int] = None,
     ):
         if backpressure not in BACKPRESSURE_POLICIES:
             raise ValueError(
@@ -583,9 +626,21 @@ class StreamSession:
         self.stats = stats if stats is not None else StreamStats()
         self.ring = PendingRing(capacity)
         self.ship = ship if ship is not None else _default_ship()
-        self._plan_fn = _plan_runner(cfg, mode, donate)
+        # ``live``: only the first ``live`` rows are real streams — the tail
+        # is dead padding (a sharded session's S-rounding, see
+        # ShardedStreamSession).  Dead rows plan with teacher_available=False
+        # (never query/learn) and are excluded from ``stream_steps``.
+        self.live = None if live is not None and live >= jax.tree.leaves(state)[0].shape[0] else live
+        self._avail = None  # device (S,) bool, built lazily at start()
+        if self.live is None:
+            self._plan_fn = _plan_runner(cfg, mode, donate)
+            self._fused_fn = _learn_plan_runner(cfg, mode, donate)
+        else:
+            plan_raw = _plan_avail_runner(cfg, mode, donate)
+            fused_raw = _learn_plan_avail_runner(cfg, mode, donate)
+            self._plan_fn = lambda *a: plan_raw(*a, self._avail)
+            self._fused_fn = lambda *a: fused_raw(*a, self._avail)
         self._learn_fn = _learn_runner(cfg, donate)
-        self._fused_fn = _learn_plan_runner(cfg, mode, donate)
         # ``block``: asks waiting for a ring slot (bounded like the ring;
         # overflow drops the oldest deferred ask, metered).
         self._deferred: "collections.deque[DeferredAsk]" = collections.deque()
@@ -611,6 +666,8 @@ class StreamSession:
         """Dispatch the first tick's plan (nothing pending yet)."""
         assert not self.started(), "session already started"
         self._t_start = time.perf_counter()
+        if self.live is not None and self._avail is None:
+            self._avail = jnp.arange(int(np.shape(x0)[0])) < self.live
         x0 = self.ship(x0)
         (new_prune, new_drift, new_meter), p = self._plan_fn(
             self.state.elm, self.state.prune, self.state.drift, self.state.meter, x0
@@ -679,7 +736,9 @@ class StreamSession:
                 self._learn(args)
             p_next = None
         self.stats.ticks += 1
-        self.stats.stream_steps += int(np.shape(x)[0])
+        self.stats.stream_steps += (
+            self.live if self.live is not None else int(np.shape(x)[0])
+        )
         self.stats.tick_ms.append((time.perf_counter() - t0) * 1e3)
         self.t += 1
         self._x, self._p = nxt, p_next
@@ -1008,6 +1067,233 @@ def run(
         while nxt is not None:
             # Double buffering: pull tick t+1 from the iterator (and ship it
             # inside advance) while the device is busy with tick t's plan.
+            nxt = next(it, None)
+            sess.advance(nxt)
+    return sess.finish(drain=drain)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded streaming: per-shard sessions with shard-local pending rings.
+# ---------------------------------------------------------------------------
+
+
+class ShardedStreamSession:
+    """N shard-local ``StreamSession``s advanced in lockstep over row
+    windows of one full-width tick source.
+
+    Everything per-tick is shard-local: shard k's ``EngineState`` rows live
+    on device k (the active mesh's devices, or wherever ``devices`` says);
+    its plan/learn dispatches, pending ring, backpressure state, and
+    teacher connection cover only rows ``[k*width, (k+1)*width)``; and a
+    label learns back only into the shard that planned the query — steady-
+    state label application is N independent masked shard-width learns,
+    never a full-width gather/scatter.  Host ingestion hands each shard a
+    row-slice view of the incoming tick (zero-copy for unpadded shards)
+    instead of staging any full-width buffer.  Per-shard query accounting
+    reconciles shard-locally (``stats_summary()["per_shard"]``), which is
+    how tests lock the no-cross-shard-traffic property.
+
+    ``teachers`` is one ``Teacher`` per shard, or a factory
+    ``shard_idx -> Teacher``; a shard's replies route to its own ring by
+    construction.  For a shared remote teacher host, hand every shard a
+    tenant handle of one ``rpc.BatchedRpcClient`` — shard asks then
+    coalesce into batched frames on one socket without breaking shard
+    locality (the demux is per-handle).
+
+    S is padded up to a multiple of ``n_shards`` with *metered dead rows*
+    at the tail: dead rows plan with ``teacher_available=False`` (never
+    query, never learn, excluded from ``stream_steps``), every shard's
+    dispatch keeps the same padded width — so all shards share one
+    compiled runner per (cfg, mode, donate) — and ``finish()`` strips the
+    padding from the merged state/outputs.  Bit-for-bit parity with the
+    unsharded ``run`` at equal S under a deterministic lossless teacher is
+    locked by tests/test_mesh_fleet.py.
+    """
+
+    def __init__(
+        self,
+        state: EngineState,
+        cfg: EngineConfig,
+        teachers,
+        n_shards: Optional[int] = None,
+        mode: str = "algo1",
+        capacity: int = 64,
+        backpressure: str = "drop_oldest",
+        collect: bool = True,
+        donate: Optional[bool] = None,
+        devices=None,
+    ):
+        if n_shards is None:
+            n_shards = sharding.fleet_axis_size()
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if devices is None:
+            mesh = sharding.mesh_or_none()
+            if mesh is not None:
+                devices = list(mesh.devices.flat)
+        if devices is not None and len(devices) < n_shards:
+            raise ValueError(f"{n_shards} shards > {len(devices)} devices")
+        if callable(teachers):
+            teachers = [teachers(k) for k in range(n_shards)]
+        teachers = list(teachers)
+        if len(teachers) != n_shards:
+            raise ValueError(
+                f"need one teacher per shard: {len(teachers)} != {n_shards}"
+            )
+        s = int(jax.tree.leaves(state)[0].shape[0])
+        self.s_real = s
+        self.n_shards = n_shards
+        self.n_pad = (-s) % n_shards
+        self.width = (s + self.n_pad) // n_shards
+        self.bounds = [
+            (k * self.width, (k + 1) * self.width) for k in range(n_shards)
+        ]
+        padded = fleet.pad_streams(state, cfg, self.n_pad)
+        self.sessions: list[StreamSession] = []
+        for k, (lo, hi) in enumerate(self.bounds):
+            sub = fleet.slice_streams(padded, lo, hi)
+            if devices is not None:
+                sub = jax.device_put(sub, devices[k])
+            live = min(self.width, max(0, s - lo))
+            self.sessions.append(
+                StreamSession(
+                    sub, cfg, teachers[k], mode=mode, capacity=capacity,
+                    backpressure=backpressure, collect=collect, donate=donate,
+                    live=live,
+                )
+            )
+        self._zeros = None  # shared immutable tick slice for fully-dead shards
+
+    def _shard_tick(self, x: np.ndarray, k: int):
+        lo, hi = self.bounds[k]
+        if hi <= self.s_real:
+            return x[lo:hi]  # view, no copy
+        shape = (self.width,) + x.shape[1:]
+        if lo >= self.s_real:
+            if self._zeros is None or self._zeros.shape != shape or self._zeros.dtype != x.dtype:
+                self._zeros = np.zeros(shape, x.dtype)
+            return self._zeros
+        # Tail shard with live + dead rows: fresh buffer per tick — the
+        # previous tick's staged rows may still be referenced by the
+        # session (the ask happens on the *next* advance) and by ring
+        # tickets, so an in-place staging buffer would corrupt them.
+        buf = np.zeros(shape, x.dtype)
+        buf[: self.s_real - lo] = x[lo:]
+        return buf
+
+    def started(self) -> bool:
+        return self.sessions[0].started()
+
+    # Per-shard dispatches are shard-LOCAL (each session's operands live
+    # on one device), so they must not inherit a caller's multi-device
+    # mesh scope — under it ``constrain_fleet`` would demand the full
+    # device set.  ``sharding.deactivate()`` makes the constraint the
+    # identity for the duration of the shard calls.
+
+    def start(self, x0) -> None:
+        x0 = np.asarray(x0)
+        with sharding.deactivate():
+            for k, sess in enumerate(self.sessions):
+                sess.start(self._shard_tick(x0, k))
+
+    def advance(self, nxt) -> None:
+        nxt = None if nxt is None else np.asarray(nxt)
+        with sharding.deactivate():
+            for k, sess in enumerate(self.sessions):
+                sess.advance(None if nxt is None else self._shard_tick(nxt, k))
+
+    def finish(
+        self, drain: bool = True
+    ) -> tuple[EngineState, Optional[FleetStepOutput], list[StreamStats]]:
+        """Drain every shard, merge states/outputs in row order (stripping
+        the dead-row padding), and return the per-shard stats list
+        (``aggregate_stats`` folds it into one summary)."""
+        states, outs, stats = [], [], []
+        with sharding.deactivate():
+            for sess in self.sessions:
+                st, o, sstats = sess.finish(drain=drain)
+                states.append(jax.device_get(st))
+                outs.append(o)
+                stats.append(sstats)
+        merged = fleet.stack_streams(states)
+        if self.n_pad:
+            merged = fleet.slice_streams(merged, 0, self.s_real)
+        out = None
+        if outs and all(o is not None for o in outs):
+            out = jax.tree.map(lambda *a: np.concatenate(a, axis=1), *outs)
+            if self.n_pad:
+                out = jax.tree.map(lambda a: a[:, : self.s_real], out)
+        return merged, out, stats
+
+    def stats_summary(self) -> dict:
+        return aggregate_stats(
+            [s.stats for s in self.sessions], padded_streams=self.n_pad
+        )
+
+
+def aggregate_stats(stats_list: list, padded_streams: int = 0) -> dict:
+    """Fold per-shard ``StreamStats`` into one fleet-wide summary.
+
+    Counters sum; latency percentiles pool the shard windows; the
+    accounting identity must hold *per shard* (a reply can only settle a
+    query its own shard issued), so ``queries_reconciled`` is the AND —
+    any cross-shard leak shows up as one shard over- and another
+    under-counting."""
+    counters = (
+        "stream_steps", "tickets_issued", "queries_issued", "labels_applied",
+        "tickets_dropped", "queries_dropped", "replies_orphaned",
+        "tickets_lost", "queries_lost", "tickets_coalesced",
+        "queries_coalesced", "asks_deferred", "tickets_reasked",
+    )
+    out = {k: sum(getattr(s, k) for s in stats_list) for k in counters}
+    out["ticks"] = max((s.ticks for s in stats_list), default=0)
+    out["wall_s"] = max((s.wall_s for s in stats_list), default=0.0)
+    out["steps_per_s"] = (
+        out["stream_steps"] / out["wall_s"] if out["wall_s"] > 0 else 0.0
+    )
+    tick_ms = [v for s in stats_list for v in s.tick_ms]
+    lab = [v for s in stats_list for v in s.label_latency_ticks]
+    out["tick_p50_ms"] = _percentile(tick_ms, 50)
+    out["tick_p95_ms"] = _percentile(tick_ms, 95)
+    out["label_latency_p50"] = _percentile(lab, 50)
+    out["label_latency_p95"] = _percentile(lab, 95)
+    out["queries_reconciled"] = all(s.reconciled for s in stats_list)
+    out["padded_streams"] = padded_streams
+    out["n_shards"] = len(stats_list)
+    out["per_shard"] = [s.summary() for s in stats_list]
+    return out
+
+
+def run_sharded(
+    state: EngineState,
+    ticks: Iterable,  # yields full-width (S, n_in) feature arrays
+    cfg: EngineConfig,
+    teachers,  # one Teacher per shard, or factory shard_idx -> Teacher
+    n_shards: Optional[int] = None,
+    mode: str = "algo1",
+    capacity: int = 64,
+    backpressure: str = "drop_oldest",
+    collect: bool = True,
+    drain: bool = True,
+    donate: Optional[bool] = None,
+    devices=None,
+) -> tuple[EngineState, Optional[FleetStepOutput], list[StreamStats]]:
+    """``run`` over a mesh-sharded fleet: the stream axis splits into
+    ``n_shards`` shard-local sessions (default: the active mesh's fleet
+    axis), each with its own pending ring and teacher — see
+    ``ShardedStreamSession``.  Returns ``(final state, outputs, per-shard
+    stats)`` with state/outputs already merged back to full (unpadded)
+    width."""
+    sess = ShardedStreamSession(
+        state, cfg, teachers, n_shards=n_shards, mode=mode, capacity=capacity,
+        backpressure=backpressure, collect=collect, donate=donate,
+        devices=devices,
+    )
+    it = iter(ticks)
+    nxt = next(it, None)
+    if nxt is not None:
+        sess.start(nxt)
+        while nxt is not None:
             nxt = next(it, None)
             sess.advance(nxt)
     return sess.finish(drain=drain)

@@ -28,3 +28,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_dev_mesh(data: int = 2, model: int = 2):
     """Small mesh for CPU multi-device tests (subprocess with 4-8 devices)."""
     return _make_mesh((data, model), ("data", "model"))
+
+
+def make_fleet_mesh(n: int = 0):
+    """1-D ``("fleet",)`` mesh over ``n`` devices (default: all visible).
+
+    The ODL fleet's stream axis shards over this axis (sharding
+    DEFAULT_RULES maps ``stream -> ("fleet", ...)``).  On a CPU host, force
+    the device count first: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    avail = len(jax.devices())
+    if n <= 0:
+        n = avail
+    if n > avail:
+        raise ValueError(f"mesh-fleet {n} > {avail} visible devices")
+    return _make_mesh((n,), ("fleet",))

@@ -25,7 +25,15 @@ into a single length-prefixed binary frame, amortizing the per-query
 round-trip the paper's pruning argument is about.  ``--teacher-secret``
 arms the HMAC challenge–response handshake on both ends (an
 unauthenticated label server is refused) — once per connection, not once
-per tenant.
+per tenant.  ``--teacher-compress`` wraps the binary frames in zlib
+envelopes (negotiated in the handshake when a secret is set).
+
+``--mesh-fleet N`` is the mega-fleet path: a single tenant's stream axis
+shards over an N-device ``("fleet",)`` mesh — one shard-local session
+(engine-state rows on device k, pending ring, teacher handle, plan/learn
+dispatch) per device, a teacher answer learning back only into the shard
+that planned the query (``stream.run_sharded``).  On a CPU host, force
+devices first: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
 ``--sched drr`` replaces the fixed quantum-tick round robin with deficit
 round robin in stream-step units, so a huge tenant cannot starve small
@@ -82,6 +90,85 @@ def _decode_feats(params, state, prompts, cfg, gen_tokens):
         yield feats
 
 
+def _serve_mesh(cfg, odl_cfg, params, state, prompts, *, mesh_fleet, batch,
+                gen_tokens, seed, teacher, teacher_latency, teacher_jitter,
+                teacher_loss, pending_capacity, backpressure, rpc_timeout_s,
+                teacher_batch_window_s, teacher_batch_max, teacher_secret,
+                teacher_compress):
+    """Mega-fleet path: one tenant, its stream axis sharded over a
+    ``("fleet",)`` mesh — one shard-local session (pending ring, teacher
+    connection, plan/learn dispatch) per device, a label learning back
+    only into the shard that planned it (``stream.run_sharded``).  On a
+    CPU host, force the device count first:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    from repro.distributed import sharding
+    from repro.launch import mesh as mesh_lib
+
+    fleet_mesh = mesh_lib.make_fleet_mesh(mesh_fleet)
+    ticks = _decode_feats(params, state, prompts, cfg, gen_tokens)
+    with contextlib.ExitStack() as stack:
+        if teacher == "rpc":
+            host, port = stack.enter_context(
+                rpc.loopback_server(n_out=cfg.odl.n_out, secret=teacher_secret)
+            )
+            # One shared batched connection; each shard gets its own tenant
+            # handle — shard asks coalesce into single frames on one socket
+            # without breaking shard locality (the demux is per-handle).
+            client = rpc.BatchedRpcClient(
+                host, port, timeout_s=rpc_timeout_s, secret=teacher_secret,
+                batch_window_s=teacher_batch_window_s,
+                batch_max=teacher_batch_max, compress=teacher_compress,
+            )
+            stack.callback(client.close)
+
+            def teachers(k):
+                return client.tenant(name=f"shard{k}")
+        else:
+            def teachers(k):
+                rng = np.random.default_rng(seed + k)
+                return stream.LatencyTeacher(
+                    label_fn=lambda tick, feats: rng.integers(
+                        0, cfg.odl.n_out, size=np.asarray(feats).shape[0]
+                    ),
+                    latency=teacher_latency, jitter=teacher_jitter,
+                    loss_prob=teacher_loss, seed=seed + k,
+                )
+
+        with sharding.activate(fleet_mesh):
+            n_shards = sharding.fleet_axis_size()
+            st, _, stats_list = stream.run_sharded(
+                engine.init_fleet(odl_cfg, batch), ticks, odl_cfg, teachers,
+                mode="serve", capacity=pending_capacity,
+                backpressure=backpressure, collect=False,
+            )
+        rpc_bytes = client.wire_bytes if teacher == "rpc" else None
+
+    queries = skips = 0
+    for k, s in enumerate(stats_list):
+        recon = "ok" if s.reconciled else "BROKEN"
+        queries += s.queries_issued
+        skips += s.stream_steps - s.queries_issued
+        print(f"shard{k}: queries {s.queries_issued}/{s.stream_steps} "
+              f"({100 * s.queries_issued / max(s.stream_steps, 1):.1f}% comm "
+              f"volume), labels {s.labels_applied}, dropped "
+              f"{s.queries_dropped}, lost {s.queries_lost}, coalesced "
+              f"{s.queries_coalesced}, accounting {recon}")
+        if not s.reconciled:
+            raise AssertionError(f"shard{k}: query accounting does not "
+                                 f"reconcile: {s.summary()}")
+    agg = stream.aggregate_stats(
+        stats_list, padded_streams=(-batch) % max(n_shards, 1))
+    meter_kb = float(np.asarray(st.meter.total).sum()) / 1e3
+    rpc_note = f"; rpc wire {rpc_bytes / 1e3:.1f} kB" if rpc_bytes else ""
+    print(f"mesh aggregate: {n_shards} shard(s) x {gen_tokens} tokens x "
+          f"{batch} streams = {agg['stream_steps']} steps in "
+          f"{agg['wall_s']:.2f}s ({agg['steps_per_s']:,.0f} steps/s); "
+          f"padded {agg['padded_streams']} dead rows; "
+          f"backpressure={backpressure}, teacher={teacher}"
+          f"{rpc_note}; {meter_kb:.1f} kB metered")
+    return queries, skips
+
+
 def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 16,
           gen_tokens: int = 32, max_len: int = 128, seed: int = 0,
           teacher_latency: int = 1, teacher_jitter: int = 0,
@@ -93,7 +180,8 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
           teacher_secret: str = None, sched: str = "rr",
           snapshot_dir: str = None, snapshot_every: int = 0,
           resume: bool = False, migrate: bool = False,
-          fuse_cohorts: bool = True):
+          fuse_cohorts: bool = True, teacher_compress: bool = False,
+          mesh_fleet: int = 0):
     cfg = configs.get_config(arch, variant)
     key = jax.random.PRNGKey(seed)
     params = model_lib.layers.init_params(model_lib.build_schema(cfg), key)
@@ -104,6 +192,27 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
     )(params, prompts)
 
     odl_cfg = model_lib.core_config(cfg)
+    if mesh_fleet:
+        if tenants != 1:
+            raise ValueError(
+                "--mesh-fleet shards ONE fleet's stream axis across devices; "
+                "it does not compose with --tenants > 1 (run one sharded "
+                "process per tenant instead)")
+        if snapshot_dir is not None or resume or migrate:
+            raise ValueError(
+                "--mesh-fleet does not compose with snapshots/resume/migrate "
+                "(per-shard sessions are not snapshot-capable yet)")
+        return _serve_mesh(
+            cfg, odl_cfg, params, state, prompts, mesh_fleet=mesh_fleet,
+            batch=batch, gen_tokens=gen_tokens, seed=seed,
+            teacher=teacher, teacher_latency=teacher_latency,
+            teacher_jitter=teacher_jitter, teacher_loss=teacher_loss,
+            pending_capacity=pending_capacity, backpressure=backpressure,
+            rpc_timeout_s=rpc_timeout_s,
+            teacher_batch_window_s=teacher_batch_window_s,
+            teacher_batch_max=teacher_batch_max,
+            teacher_secret=teacher_secret, teacher_compress=teacher_compress,
+        )
     durable = snapshot_dir is not None
     # One backbone decode feeds every tenant: tee the tick source N ways
     # (the scheduler keeps tenants within one time slice of each other, so
@@ -142,7 +251,7 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
                 client = rpc.BatchedRpcClient(
                     host, port, timeout_s=rpc_timeout_s, secret=teacher_secret,
                     batch_window_s=teacher_batch_window_s,
-                    batch_max=teacher_batch_max,
+                    batch_max=teacher_batch_max, compress=teacher_compress,
                 )
                 stack.callback(client.close)
                 return client.tenant(name=f"tenant{i}")
@@ -169,7 +278,7 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
             rpc_teachers, rpc_clients = multiplex.shared_rpc_teachers(
                 [(host, port)] * tenants, timeout_s=rpc_timeout_s,
                 secret=teacher_secret, batch_window_s=teacher_batch_window_s,
-                batch_max=teacher_batch_max,
+                batch_max=teacher_batch_max, compress=teacher_compress,
             )
             for client in rpc_clients:
                 stack.callback(client.close)
@@ -325,6 +434,15 @@ def main(argv=None):
     ap.add_argument("--teacher-batch-max", type=int,
                     default=rpc.DEFAULT_BATCH_MAX,
                     help="max asks coalesced into one rpc frame")
+    ap.add_argument("--teacher-compress", action="store_true",
+                    help="wrap rpc frames in zlib envelopes (negotiated in "
+                    "the HMAC handshake when --teacher-secret is set)")
+    ap.add_argument("--mesh-fleet", type=int, default=0,
+                    help="shard the (single) tenant's stream axis over this "
+                    "many devices on a ('fleet',) mesh — one shard-local "
+                    "session (ring + teacher + dispatch) per device; 0: off "
+                    "(on CPU, force devices via "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     ap.add_argument("--pending-capacity", type=int, default=8,
                     help="in-flight query ring capacity (see --backpressure)")
     ap.add_argument("--snapshot-dir", default=None,
@@ -350,7 +468,9 @@ def main(argv=None):
           teacher_secret=args.teacher_secret, sched=args.sched,
           snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
           resume=args.resume, migrate=args.migrate,
-          fuse_cohorts=args.fuse_cohorts == "on")
+          fuse_cohorts=args.fuse_cohorts == "on",
+          teacher_compress=args.teacher_compress,
+          mesh_fleet=args.mesh_fleet)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,192 @@
+"""Mesh-sharded mega-fleet tests, run in SUBPROCESSES with XLA_FLAGS
+forcing 8 host devices (same rule as tests/test_multidevice.py: jax locks
+the device count at first init, and the main test process must keep
+seeing 1 device).
+
+What these lock, per the sharding acceptance criteria:
+
+* ``run_fleet_sharded`` (GSPMD resident fleet) and ``run_fleet_shards``
+  (shard-local blocked dispatch) are BIT-FOR-BIT the single-device
+  ``run_fleet`` at equal S — including a non-divisible S (dead-row
+  padding at the tail) and a block size that does not divide the shard
+  width (the partial / padding-straddling block path).
+* ``stream.run_sharded`` is bit-for-bit the solo ``stream.run`` under a
+  deterministic lossless teacher, at latency 0 and > 0, with and without
+  stream-axis padding.
+* Label application stays shard-local: the query-accounting identity must
+  hold PER SHARD (a reply can only settle a query its own shard issued),
+  so any cross-shard label leak breaks one shard's reconciliation.
+* Everything sharded runs inside ``sharding.activate(mesh)`` — the
+  shard-local dispatch paths must not trip full-mesh sharding
+  constraints on their single-device operands (``sharding.deactivate``).
+
+Parity note: dispatch widths here are "regular" (8 / 32 / 128 / 256 /
+full) — XLA vectorizes tiny odd widths (1-5 rows) differently, at which
+point parity is only ~1e-5, so shard/block sizes in bitwise tests must
+keep every dispatch at a regular width.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+ENV = dict(
+    os.environ,
+    XLA_FLAGS="--xla_force_host_platform_device_count=8",
+    PYTHONPATH="src",
+    JAX_PLATFORMS="cpu",
+)
+
+_PRELUDE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro import engine
+from repro.core import drift as drift_mod, oselm, pruning
+from repro.distributed import sharding
+from repro.engine import stream
+from repro.launch.mesh import make_fleet_mesh
+
+cfg = engine.EngineConfig(
+    elm=oselm.OSELMConfig(n_in=12, n_hidden=16, n_out=4, variant='hash',
+                          ridge=1e-2),
+    prune=pruning.PruneConfig(min_trained=2),
+    drift=drift_mod.DriftConfig(),
+)
+mesh = make_fleet_mesh()
+assert int(mesh.devices.size) == 8, mesh
+"""
+
+
+def _run(code: str, timeout=600):
+    r = subprocess.run(
+        [sys.executable, "-c", _PRELUDE + textwrap.dedent(code)],
+        env=ENV,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+def test_fleet_sharded_modes_bitwise_parity():
+    """GSPMD + shard-local blocked runs == single-device run, bit for bit.
+
+    S=512 divides the 8-device mesh evenly; S=1020 pads to 1024 (width
+    128, 4 dead tail rows) and block=32 forces the last block of the last
+    shard to straddle live and dead rows (the ``real_hi`` path)."""
+    _run(
+        """
+        t = 4
+        for s, block in ((512, None), (1020, 32)):
+            kx, ky = jax.random.split(jax.random.PRNGKey(s))
+            xs = jnp.tanh(jax.random.normal(kx, (t, s, 12)))
+            ys = jax.random.randint(ky, (t, s), 0, 4)
+            ref, _ = engine.run_fleet(engine.init_fleet(cfg, s), xs, ys, cfg,
+                                      mode='train_phase', chunk=t)
+            beta_ref = np.asarray(ref.elm.beta)
+            p_ref = np.asarray(ref.elm.P)
+            with sharding.activate(mesh):
+                placed, n_pad = engine.shard_fleet(engine.init_fleet(cfg, s), cfg)
+                assert n_pad == (-s) % 8, n_pad
+                st, _ = engine.run_fleet_sharded(placed, xs, ys, cfg,
+                                                 mode='train_phase', chunk=t)
+                got = np.asarray(jax.device_get(st.elm.beta))
+                assert got.shape[0] == s + n_pad
+                assert np.array_equal(beta_ref, got[:s]), f'gspmd diverged S={s}'
+
+                sh = engine.split_fleet(engine.init_fleet(cfg, s), cfg,
+                                        block=block)
+                sh, _ = engine.run_fleet_shards(sh, xs, ys, cfg,
+                                                mode='train_phase', chunk=t)
+                merged = engine.merge_fleet(sh)
+            assert merged.elm.beta.shape[0] == s  # padding stripped
+            assert np.array_equal(beta_ref, np.asarray(merged.elm.beta)), (
+                f'blocked shard run diverged S={s}')
+            assert np.array_equal(p_ref, np.asarray(merged.elm.P)), (
+                f'blocked shard P diverged S={s}')
+        print('OK')
+        """
+    )
+
+
+def test_stream_run_sharded_bitwise_parity_and_shard_local_accounting():
+    """Sharded streaming sessions == solo ``stream.run``, and every
+    shard's query accounting reconciles on its own (the
+    no-cross-shard-gather lock): labels learn back only into the shard
+    that planned them, so totals match the solo run AND each per-shard
+    identity holds independently."""
+    _run(
+        """
+        t, n = 8, 8
+        for s in (64, 60):  # divisible; padded (60 -> 8 shards of width 8)
+            kx, ky = jax.random.split(jax.random.PRNGKey(s))
+            xs = jnp.tanh(jax.random.normal(kx, (t, s, 12)))
+            ys = np.asarray(jax.random.randint(ky, (t, s), 0, 4), np.int32)
+            xs_host = [np.asarray(x) for x in np.asarray(xs)]
+            width = (s + (-s) % n) // n
+            ys_pad = np.pad(ys, ((0, 0), (0, (-s) % n)))
+            for lat in (0, 3):
+                solo, _, solo_stats = stream.run(
+                    engine.init_fleet(cfg, s), (x for x in xs_host), cfg,
+                    stream.LatencyTeacher(stream.array_labels(ys), latency=lat),
+                    mode='train_phase', capacity=16, collect=False)
+                with sharding.activate(mesh):
+                    assert sharding.fleet_axis_size() == n
+                    st, _, stats_list = stream.run_sharded(
+                        engine.init_fleet(cfg, s), (x for x in xs_host), cfg,
+                        lambda k: stream.LatencyTeacher(
+                            stream.array_labels(
+                                ys_pad[:, k * width:(k + 1) * width]),
+                            latency=lat),
+                        mode='train_phase', capacity=16, collect=False)
+                assert st.elm.beta.shape[0] == s  # padding stripped
+                assert np.array_equal(np.asarray(solo.elm.beta),
+                                      np.asarray(st.elm.beta)), (
+                    f'sharded stream diverged S={s} lat={lat}')
+                agg = stream.aggregate_stats(stats_list,
+                                             padded_streams=(-s) % n)
+                assert agg['n_shards'] == n
+                assert agg['queries_reconciled']  # AND over shards
+                assert agg['stream_steps'] == t * s  # dead rows excluded
+                assert agg['queries_issued'] == solo_stats.queries_issued
+                assert agg['labels_applied'] == solo_stats.labels_applied
+                assert agg['labels_applied'] > 0
+                per = agg['per_shard']
+                assert len(per) == n
+                assert all(p['queries_reconciled'] for p in per)
+                assert sum(p['queries_issued'] for p in per) == \\
+                    agg['queries_issued']
+                assert sum(p['labels_applied'] for p in per) == \\
+                    agg['labels_applied']
+        print('OK')
+        """
+    )
+
+
+def test_run_fleet_shards_outside_mesh_scope():
+    """The blocked shard path also runs with NO active mesh (explicit
+    device list), and with a teacher_available mask gating learns."""
+    _run(
+        """
+        t, s = 3, 256
+        kx, ky = jax.random.split(jax.random.PRNGKey(7))
+        xs = jnp.tanh(jax.random.normal(kx, (t, s, 12)))
+        ys = jax.random.randint(ky, (t, s), 0, 4)
+        avail = jnp.asarray(
+            np.asarray(jax.random.bernoulli(jax.random.PRNGKey(9), 0.5,
+                                            (t, s))))
+        ref, _ = engine.run_fleet(engine.init_fleet(cfg, s), xs, ys, cfg,
+                                  mode='train_phase', chunk=t,
+                                  teacher_available=avail)
+        sh = engine.split_fleet(engine.init_fleet(cfg, s), cfg, n_shards=4,
+                                devices=jax.devices()[:4])
+        sh, _ = engine.run_fleet_shards(sh, xs, ys, cfg, mode='train_phase',
+                                        teacher_available=avail, chunk=t)
+        merged = engine.merge_fleet(sh)
+        assert np.array_equal(np.asarray(ref.elm.beta),
+                              np.asarray(merged.elm.beta))
+        print('OK')
+        """
+    )

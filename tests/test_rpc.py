@@ -566,3 +566,94 @@ def test_stream_run_survives_a_poisoned_connection(server):
     assert int(np.asarray(st.elm.count).sum()) == 0
     _assert_reconciled(stats)
     teacher.close()
+
+
+# ---------------------------------------------------------------------------
+# zlib-compressed envelopes (0x03)
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_roundtrip_is_answered_in_kind_and_metered(server):
+    """A 0x03 envelope carries one whole v2 frame; the server serves it
+    transparently, replies in a 0x03 envelope, and meters wire-vs-raw
+    bytes in both directions."""
+    s = 32
+    feats = np.zeros((s, 6), np.float32)
+    with rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=10.0,
+                        compress=True) as teacher:
+        ticket = teacher.ask(feats, np.ones(s, bool), tick=2)
+        replies = _drain(teacher)
+    assert replies and replies[0].ticket == ticket
+    want = [rpc.expected_label(2, i, server.n_out) for i in range(s)]
+    assert replies[0].labels.tolist() == want
+    assert server.frames_compressed == 1
+    assert server.frames_v2 == 1  # the inner frame still counts as v2
+    assert server.raw_bytes_in > server.compressed_bytes_in > 0
+    assert server.raw_bytes_out >= server.compressed_bytes_out > 0
+    # The client's wire counter saw the envelope, not the raw frame.
+    frame = rpc.encode_asks([(ticket, 2, np.ones(s, bool), feats)])
+    assert server.compressed_bytes_in < len(frame)
+
+
+def test_uncompressed_client_pays_no_compression_tax(server):
+    """compress=False (the default) never emits a 0x03 byte and the
+    server's compression counters stay untouched."""
+    with rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=10.0) as teacher:
+        teacher.ask(np.zeros((2, 3), np.float32), np.ones(2, bool), tick=1)
+        assert _drain(teacher)
+    assert server.frames_compressed == 0
+    assert server.compressed_bytes_in == 0
+
+
+def test_compress_requires_v2_wire():
+    with pytest.raises(ValueError, match="v2"):
+        rpc.RpcTeacher("127.0.0.1", 1, wire="v1", compress=True)
+
+
+def test_handshake_negotiates_compression():
+    """With a secret, compression rides the HMAC handshake: the server
+    echoes the grant and both directions travel as 0x03 envelopes."""
+    server = rpc.LabelServer(n_out=4, secret="s3").start()
+    try:
+        with rpc.RpcTeacher("127.0.0.1", server.port, timeout_s=10.0,
+                            secret="s3", compress=True) as teacher:
+            assert teacher._conn.compress_granted
+            teacher.ask(np.zeros((4, 3), np.float32), np.ones(4, bool), tick=0)
+            assert _drain(teacher)
+        assert server.frames_compressed == 1
+    finally:
+        server.close()
+
+
+def test_corrupt_zlib_envelope_is_a_frame_error(server):
+    """Garbage inside a 0x03 envelope must meter as a frame error and
+    drop the connection — never crash the worker thread."""
+    bad = b"not-zlib-data"
+    envelope = bytes([rpc.WIRE_V3_ZLIB]) + len(bad).to_bytes(4, "little") + bad
+    conn = socket.create_connection(("127.0.0.1", server.port), timeout=5.0)
+    try:
+        conn.sendall(envelope)
+        deadline = time.monotonic() + 5.0
+        while server.frame_errors == 0 and time.monotonic() < deadline:
+            time.sleep(5e-3)
+        assert server.frame_errors == 1
+        assert conn.recv(1) == b""
+    finally:
+        conn.close()
+
+
+def test_batched_client_compresses_shared_frames(server):
+    """The shared-connection client wraps its batched frames: two tenants,
+    one socket, one compressed envelope carrying both asks."""
+    feats = np.zeros((8, 4), np.float32)
+    mask = np.ones(8, bool)
+    with rpc.BatchedRpcClient("127.0.0.1", server.port, timeout_s=10.0,
+                              batch_window_s=0.2, compress=True) as client:
+        a, b = client.tenant("a"), client.tenant("b")
+        a.ask(feats, mask, 3)
+        b.ask(feats, mask, 3)
+        ra, rb = _drain(a), _drain(b)
+    assert ra and rb
+    assert client.wire_messages == 1 and client.asks_sent == 2
+    assert server.frames_compressed == 1
+    assert server.asks_served == 2

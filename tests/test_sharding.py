@@ -1,0 +1,168 @@
+"""Unit tests for the logical-axis sharding layer (distributed/sharding).
+
+Two halves:
+
+* In-process tests against the no-mesh / 1-device behavior (identity
+  constraints, ``activate``/``deactivate`` scope restore semantics) —
+  these must not force a multi-device jax init in the main test process.
+* One subprocess (8 forced host devices, same rule as
+  tests/test_multidevice.py) covering spec resolution that needs a real
+  multi-device mesh: ``fleet_sharding`` over leaf ndims 1-3, the
+  non-divisible-S replication fallback, ``ensure_axis_sharded`` edge
+  cases, ``fleet_axis_size``, and spec stability under nested
+  ``activate`` scopes.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding
+
+ENV = dict(
+    os.environ,
+    XLA_FLAGS="--xla_force_host_platform_device_count=8",
+    PYTHONPATH="src",
+    JAX_PLATFORMS="cpu",
+)
+
+
+def _run(code: str, timeout=600):
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=ENV,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+def _one_dev_mesh():
+    return Mesh(np.asarray(jax.devices()[:1]), ("fleet",))
+
+
+def test_no_mesh_is_identity():
+    x = jax.numpy.ones((4, 3))
+    assert sharding.mesh_or_none() is None
+    assert sharding.constrain(x, "stream", None) is x
+    assert sharding.named_sharding("stream", None) is None
+    assert sharding.fleet_sharding(2, shape=(4, 3)) is None
+    assert sharding.fleet_axis_size() == 1
+    assert sharding.constrain_fleet({"a": x})["a"] is x
+
+
+def test_deactivate_restores_activate_scope():
+    mesh = _one_dev_mesh()
+    with sharding.activate(mesh):
+        assert sharding.mesh_or_none() is mesh
+        assert sharding.fleet_axis_size() == 1  # 1-device fleet axis
+        with sharding.deactivate():
+            # Fully inactive inside: constraints become identities.
+            assert sharding.mesh_or_none() is None
+            assert sharding.named_sharding("stream") is None
+            assert sharding.fleet_axis_size() == 1
+        # ...and the enclosing scope comes back intact.
+        assert sharding.mesh_or_none() is mesh
+        assert sharding.named_sharding("stream") is not None
+    assert sharding.mesh_or_none() is None
+
+
+def test_deactivate_restores_on_exception():
+    mesh = _one_dev_mesh()
+    with sharding.activate(mesh):
+        try:
+            with sharding.deactivate():
+                raise RuntimeError("boom")
+        except RuntimeError:
+            pass
+        assert sharding.mesh_or_none() is mesh
+
+
+def test_nested_activate_restores_outer_rules():
+    mesh = _one_dev_mesh()
+    with sharding.activate(mesh):
+        outer = sharding.resolve("stream")
+        with sharding.activate(mesh, rules={"stream": None}):
+            assert sharding.resolve("stream") == P(None)
+        assert sharding.resolve("stream") == outer
+
+
+def test_resolve_unknown_and_none_axes():
+    with sharding.activate(_one_dev_mesh()):
+        assert sharding.resolve(None, "no_such_axis") == P(None, None)
+
+
+def test_multi_device_spec_resolution():
+    _run(
+        """
+        import jax, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed import sharding
+        from repro.launch.mesh import make_fleet_mesh
+
+        mesh = make_fleet_mesh()
+        assert int(mesh.devices.size) == 8
+
+        with sharding.activate(mesh):
+            assert sharding.fleet_axis_size() == 8
+
+            # fleet_sharding over leaf ndims 1-3: leading axis on the
+            # fleet rule, everything else replicated.
+            assert sharding.fleet_sharding(1).spec == P('fleet')
+            assert sharding.fleet_sharding(2).spec == P('fleet', None)
+            assert sharding.fleet_sharding(3).spec == P('fleet', None, None)
+
+            # Divisible S shards; non-divisible S degrades to replication
+            # (resolve drops mesh axes that do not divide the dim).
+            assert sharding.fleet_sharding(2, shape=(64, 16)).spec == \\
+                P('fleet', None)
+            assert sharding.fleet_sharding(2, shape=(100, 16)).spec == \\
+                P(None, None)
+            assert sharding.fleet_sharding(1, shape=(8,)).spec == P('fleet')
+            assert sharding.fleet_sharding(1, shape=(7,)).spec == P(None)
+
+            # ensure_axis_sharded: adds the axis to the LARGEST divisible
+            # unsharded dim...
+            assert sharding.ensure_axis_sharded(P(None, None), (16, 8),
+                                                'fleet') == P('fleet', None)
+            assert sharding.ensure_axis_sharded(P(None, None), (8, 64),
+                                                'fleet') == P(None, 'fleet')
+            # ...extends a too-short spec...
+            assert sharding.ensure_axis_sharded(P(), (16, 8), 'fleet') == \\
+                P('fleet', None)
+            # ...is a no-op when the axis is already used, when no dim
+            # divides, and for absent mesh axes.
+            spec = P('fleet', None)
+            assert sharding.ensure_axis_sharded(spec, (16, 8), 'fleet') is spec
+            assert sharding.ensure_axis_sharded(P(None,), (7,), 'fleet') == \\
+                P(None)
+            assert sharding.ensure_axis_sharded(spec, (16, 8), 'model') is spec
+
+            # Spec stability under nested activate scopes: re-activating
+            # the same mesh (or a rule override) must not perturb the
+            # outer resolution once the inner scope exits.
+            outer = sharding.fleet_sharding(2, shape=(64, 16)).spec
+            with sharding.activate(mesh):
+                assert sharding.fleet_sharding(2, shape=(64, 16)).spec == outer
+            with sharding.activate(mesh, rules={'stream': None}):
+                assert sharding.fleet_sharding(2, shape=(64, 16)).spec == \\
+                    P(None, None)
+            assert sharding.fleet_sharding(2, shape=(64, 16)).spec == outer
+
+            with sharding.deactivate():
+                assert sharding.fleet_sharding(2) is None
+                assert sharding.fleet_axis_size() == 1
+            assert sharding.fleet_axis_size() == 8
+
+        assert sharding.fleet_sharding(2) is None
+        print('OK')
+        """
+    )
