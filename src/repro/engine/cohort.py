@@ -339,8 +339,16 @@ class CohortSession:
                 m._x = x_host[i]
                 m._p = stream.PlanSlice(p_next, lo, hi)
         wall_ms = (time.perf_counter() - t0) * 1e3
+        rate = 1e3 / wall_ms if wall_ms > 0 else 0.0
         for i in ticking:
-            members[i].stats.tick_ms.append(wall_ms)
+            st = members[i].stats
+            st.tick_ms.append(wall_ms)
+            if rate > 0:  # same load signal solo `advance` keeps
+                st.tick_rate_ema = (
+                    rate if st.tick_rate_ema == 0.0
+                    else st.tick_rate_ema
+                    + stream.TICK_RATE_EMA_ALPHA * (rate - st.tick_rate_ema)
+                )
         return detached, bool(ticking)
 
     # -- internals ---------------------------------------------------------

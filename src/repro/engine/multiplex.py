@@ -85,6 +85,8 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import hashlib
+import json
 import os
 import time
 from typing import Iterable, NamedTuple, Optional
@@ -99,6 +101,29 @@ from repro.runtime import fault
 from repro.runtime.checkpoint import CheckpointManager
 
 SCHEDULERS = ("rr", "drr")
+
+
+def shape_key(cfg: EngineConfig, mode: str, donate: Optional[bool], s: int) -> str:
+    """Stable cross-process id of a tenant's compiled-shape class.
+
+    This is exactly the cohort fuse key ``(cfg, mode, donate, S)`` as a
+    short hash: two tenants with equal keys share compiled executables here
+    and can fuse into one cohort.  The elastic router
+    (``runtime/elastic.py``) packs same-key tenants onto the same worker so
+    that sharing actually happens — the key must therefore be computable on
+    both sides of the wire, hence a digest of the JSON config rather than a
+    Python hash.
+    """
+    blob = json.dumps(
+        {
+            "cfg": snapshot_mod.config_to_dict(cfg),
+            "mode": mode,
+            "donate": bool(True if donate is None else donate),
+            "s": int(s),
+        },
+        sort_keys=True,
+    )
+    return hashlib.sha1(blob.encode()).hexdigest()[:12]
 
 
 @dataclasses.dataclass
@@ -468,6 +493,7 @@ class Multiplexer:
         sched: str = "rr",
         snapshot_dir: Optional[str] = None,
         snapshot_every: int = 0,
+        snapshot_full_every: int = 1,
         resume: bool = False,
         snapshots: Optional[dict] = None,
         pending: str = "auto",
@@ -492,6 +518,9 @@ class Multiplexer:
         self._cohorts: dict = {}  # fuse key -> live _CohortUnit
         self.snapshot_dir = snapshot_dir
         self.snapshot_every = snapshot_every
+        # Cadence saves ship only changed leaves, with a full snapshot every
+        # k-th save (runtime/checkpoint.py); 1 = every save full.
+        self.snapshot_full_every = snapshot_full_every
         self._resume = resume
         self._pending = pending
         self.agg = MultiplexStats(n_tenants=len(tenants))
@@ -508,7 +537,10 @@ class Multiplexer:
     def _manager_for(self, name: str) -> Optional[CheckpointManager]:
         if self.snapshot_dir is None:
             return None
-        return CheckpointManager(os.path.join(self.snapshot_dir, name))
+        return CheckpointManager(
+            os.path.join(self.snapshot_dir, name),
+            full_every=self.snapshot_full_every,
+        )
 
     def admit(self, tenant: Tenant, snapshot: Optional[dict] = None,
               positioned: bool = False) -> None:
@@ -544,10 +576,61 @@ class Multiplexer:
     def finished(self, name: str) -> bool:
         return self._slot(name).result is not None
 
+    def live_tenants(self) -> list[str]:
+        """Names of tenants still being scheduled (admission order)."""
+        return [s.tenant.name for s in self._slots if s.result is None]
+
+    def finished_results(self) -> dict[str, TenantResult]:
+        """Per-tenant results of every *finished* tenant — unlike
+        ``results()``, callable while others are still live (the worker
+        serves long-lived fleets that never fully drain)."""
+        return {
+            s.tenant.name: s.result for s in self._slots if s.result is not None
+        }
+
+    def load_report(self) -> list[dict]:
+        """Per-live-tenant load signals for the elastic router: tick cursor,
+        tick-rate EMA, ring occupancy (current/high-water/capacity), the
+        compiled-shape key placement packs by, and whether the tenant is
+        currently riding a fused cohort.  Accurate while fused — everything
+        reported here is per-tenant host state, which cohort ticking keeps
+        current."""
+        out = []
+        for slot in self._slots:
+            if slot.result is not None:
+                continue
+            sess = slot.session
+            stats = sess.stats
+            out.append({
+                "name": slot.tenant.name,
+                "t": sess.t,
+                "s": slot.s,
+                "shape_key": shape_key(sess.cfg, sess.mode, sess._donate, slot.s),
+                "tick_rate_ema": stats.tick_rate_ema,
+                "ring": len(sess.ring),
+                "ring_hwm": stats.ring_occupancy_hwm,
+                "ring_capacity": sess.ring.capacity,
+                "queries_issued": stats.queries_issued,
+                "labels_applied": stats.labels_applied,
+                "draining": slot.draining,
+                "fused": slot.unit is not None,
+            })
+        return out
+
     def extract(self, name: str, quiesce_ticks: int = 4096):
-        """Live-migrate a tenant out: quiesce (bounded drain of in-flight
-        replies — still-unanswered tickets stay in the ring and travel in
-        the snapshot), snapshot, and remove it from this scheduler.
+        """Live-migrate a tenant out: snapshot the session and remove it
+        from this scheduler.
+
+        When the teacher cannot snapshot its own state, the session first
+        quiesces (bounded drain of in-flight replies, salvaging answers
+        that would die with the connection — still-unanswered tickets stay
+        in the ring, travel in the snapshot, and are re-asked on restore).
+        A snapshot-capable teacher (``snapshot_state``) skips the quiesce:
+        its undelivered inbox rides the snapshot verbatim, so the restored
+        run replays every reply at its original due tick.  Draining early
+        would apply labels *before* the plans they interleave with in the
+        uninterrupted run — those plans then see a different ``elm`` and
+        can flip query decisions, breaking bit-for-bit migration.
 
         Returns ``(snapshot_tree, ticks)``: the serialized session and the
         tenant's *partially-consumed* tick iterator (positioned at the next
@@ -573,7 +656,10 @@ class Multiplexer:
             else:
                 self._live.extend(freed)
             self._cohorts = {k: u for k, u in self._cohorts.items() if u.slots}
-        if quiesce_ticks > 0:
+        snapshot_capable = (
+            getattr(slot.session.teacher, "snapshot_state", None) is not None
+        )
+        if quiesce_ticks > 0 and not snapshot_capable:
             slot.session.quiesce(
                 max_ticks=quiesce_ticks, idle_sleep_s=slot.DRAIN_IDLE_SLEEP_S
             )

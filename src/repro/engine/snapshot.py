@@ -52,6 +52,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
+import zlib
 from typing import Callable, Iterable, Optional
 
 import jax.numpy as jnp
@@ -64,6 +65,10 @@ from repro.engine import fleet, stream
 from repro.engine.types import EngineConfig, EngineState
 
 SNAPSHOT_VERSION = 1
+
+# Wire-format version of encode_snapshot/decode_snapshot frames — bumped
+# independently of SNAPSHOT_VERSION (which versions the *tree* semantics).
+SNAPSHOT_WIRE_VERSION = 1
 
 # How a restore handles ring entries whose teacher state could not come
 # along (socket teachers): re-ask them through the fresh teacher, drop them
@@ -415,3 +420,114 @@ def restore(
             sess._cols[k] = [np.array(row) for row in np.asarray(col[k])]
         sess._trained_rows = [np.array(row) for row in np.asarray(col["trained"])]
     return sess
+
+
+# ---------------------------------------------------------------------------
+# Wire codec: a snapshot tree as ONE length-prefixed binary frame
+# ---------------------------------------------------------------------------
+#
+# Until now a snapshot only moved in-process (extract -> admit) or through a
+# shared checkpoint directory.  The elastic control plane (runtime/worker.py,
+# runtime/elastic.py) migrates tenants *between processes over a socket*, so
+# the tree needs a wire form.  It reuses the v2 frame conventions of
+# engine/rpc.py — [0x02][4-byte LE header length][JSON header][raw payload] —
+# with the header carrying the tree structure (runtime.checkpoint's manifest
+# encoding) and a per-leaf spec list {path, dtype, shape, length, crc32}; the
+# payload is every leaf's C-order bytes concatenated in spec order.  Each
+# leaf carries its own zlib.crc32, so a flipped bit anywhere is rejected
+# *naming the damaged leaf* instead of restoring a silently-corrupt P.
+
+
+def encode_snapshot(tree: dict) -> bytes:
+    """Serialize a :func:`capture` tree (or any dict/list tree of numpy
+    leaves) to one self-delimiting binary frame."""
+    from repro.engine import rpc as rpc_mod
+    from repro.runtime import checkpoint as ckpt_mod
+
+    specs = []
+    chunks = []
+    for path, leaf in ckpt_mod._flatten(tree):
+        # tobytes() serializes any layout in C order; ascontiguousarray
+        # would promote 0-d leaves (the unicode meta) to 1-d and break the
+        # bitwise roundtrip.
+        arr = np.asarray(leaf)
+        buf = arr.tobytes()
+        specs.append({
+            "path": "/".join(path),
+            "dtype": arr.dtype.str,
+            "shape": list(arr.shape),
+            "len": len(buf),
+            "crc": zlib.crc32(buf),
+        })
+        chunks.append(buf)
+    payload = b"".join(chunks)
+    header = {
+        "kind": "snapshot",
+        "wire_version": SNAPSHOT_WIRE_VERSION,
+        "payload_len": len(payload),
+        "tree": ckpt_mod._manifest_of(tree),
+        "leaves": specs,
+    }
+    return rpc_mod._encode_frame(header, payload)
+
+
+def decode_snapshot(data: bytes) -> dict:
+    """Rebuild the tree from :func:`encode_snapshot` bytes.
+
+    Raises ``ValueError`` on a wrong version byte, a non-snapshot frame, a
+    corrupt leaf checksum (naming the leaf), or wire-version mismatch; and
+    ``EOFError`` when the buffer ends inside the frame (torn transfer).
+    Every returned leaf owns its bytes — restoring from it never aliases
+    the caller's buffer.
+    """
+    from repro.engine import rpc as rpc_mod
+    from repro.runtime import checkpoint as ckpt_mod
+
+    if len(data) < 5:
+        raise EOFError(
+            f"snapshot frame truncated: {len(data)} bytes is shorter than "
+            "the [version][header length] preamble"
+        )
+    if data[0] != rpc_mod.WIRE_V2:
+        raise ValueError(
+            f"snapshot frame version byte {data[0]:#04x} != v2 "
+            f"{rpc_mod.WIRE_V2:#04x} — not a snapshot wire frame"
+        )
+    hlen = int.from_bytes(data[1:5], "little")
+    if len(data) < 5 + hlen:
+        raise EOFError(
+            f"snapshot frame truncated inside the header (wanted {hlen} "
+            f"header bytes, have {len(data) - 5})"
+        )
+    try:
+        header = json.loads(data[5 : 5 + hlen].decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ValueError(f"corrupt snapshot frame header: {e}") from e
+    if not isinstance(header, dict) or header.get("kind") != "snapshot":
+        raise ValueError(
+            f"frame is not a snapshot (kind={header.get('kind') if isinstance(header, dict) else header!r})"
+        )
+    if header.get("wire_version") != SNAPSHOT_WIRE_VERSION:
+        raise ValueError(
+            f"snapshot wire version {header.get('wire_version')} != "
+            f"supported {SNAPSHOT_WIRE_VERSION}"
+        )
+    payload = data[5 + hlen :]
+    if len(payload) != int(header["payload_len"]):
+        raise EOFError(
+            f"snapshot frame truncated in the payload (declared "
+            f"{header['payload_len']} bytes, have {len(payload)})"
+        )
+    leaves = {}
+    off = 0
+    for spec in header["leaves"]:
+        buf = payload[off : off + spec["len"]]
+        off += spec["len"]
+        if zlib.crc32(buf) != spec["crc"]:
+            raise ValueError(
+                f"snapshot leaf {spec['path']!r} failed its checksum — "
+                "refusing to restore corrupt state"
+            )
+        arr = np.frombuffer(buf, dtype=np.dtype(spec["dtype"]))
+        leaves[spec["path"]] = arr.reshape(spec["shape"]).copy()
+    return ckpt_mod._unflatten(leaves, header["tree"])

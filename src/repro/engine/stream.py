@@ -102,6 +102,10 @@ DRAIN_IDLE_SLEEP_S = 200e-6
 # bounded PendingRing and runner LRUs).  p50/p95 reflect recent ticks.
 STATS_WINDOW = 4096
 
+# Smoothing of StreamStats.tick_rate_ema — a load signal, not an accounting
+# counter, so responsiveness beats precision.
+TICK_RATE_EMA_ALPHA = 0.1
+
 # Pluggable pending-ring saturation policies (see module docstring).
 BACKPRESSURE_POLICIES = ("drop_oldest", "drop_newest", "block", "coalesce")
 
@@ -381,6 +385,13 @@ class StreamStats:
     asks_deferred: int = 0  # ``block``: asks that waited for a ring slot
     tickets_reasked: int = 0  # in-flight tickets re-submitted after a restore
     wall_s: float = 0.0
+    # Load signals for the elastic router (runtime/elastic.py): a wall-clock
+    # EMA of the tick rate (ticks/s — NOT deterministic, excluded from
+    # parity comparisons) and the pending ring's high-water occupancy (a
+    # teacher that can't keep up shows here before queries start dropping).
+    # Both travel in snapshots so a migrated tenant keeps its history.
+    tick_rate_ema: float = 0.0
+    ring_occupancy_hwm: int = 0
     tick_ms: "collections.deque" = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=STATS_WINDOW)
     )
@@ -436,6 +447,8 @@ class StreamStats:
             "asks_deferred": self.asks_deferred,
             "tickets_reasked": self.tickets_reasked,
             "queries_reconciled": self.reconciled,
+            "tick_rate_ema": self.tick_rate_ema,
+            "ring_occupancy_hwm": self.ring_occupancy_hwm,
             "tick_p50_ms": self.tick_p50_ms,
             "tick_p95_ms": self.tick_p95_ms,
             "label_latency_p50": self.label_latency_p50,
@@ -739,7 +752,14 @@ class StreamSession:
         self.stats.stream_steps += (
             self.live if self.live is not None else int(np.shape(x)[0])
         )
-        self.stats.tick_ms.append((time.perf_counter() - t0) * 1e3)
+        tick_s = time.perf_counter() - t0
+        self.stats.tick_ms.append(tick_s * 1e3)
+        if tick_s > 0:
+            rate = 1.0 / tick_s
+            ema = self.stats.tick_rate_ema
+            self.stats.tick_rate_ema = (
+                rate if ema == 0.0 else ema + TICK_RATE_EMA_ALPHA * (rate - ema)
+            )
         self.t += 1
         self._x, self._p = nxt, p_next
 
@@ -886,6 +906,9 @@ class StreamSession:
         ticket = self.teacher.ask(x, queried, t)
         self.stats.tickets_issued += 1
         dropped = self.ring.push(ticket, PendingTicket(t, queried, p, x))
+        self.stats.ring_occupancy_hwm = max(
+            self.stats.ring_occupancy_hwm, len(self.ring)
+        )
         if dropped is not None:
             self.stats.tickets_dropped += 1
             self.stats.queries_dropped += int(dropped.queried.sum())

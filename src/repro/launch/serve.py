@@ -169,6 +169,135 @@ def _serve_mesh(cfg, odl_cfg, params, state, prompts, *, mesh_fleet, batch,
     return queries, skips
 
 
+def serve_fleet(workers: int = 2, tenants: int = 4, batch: int = 4,
+                gen_tokens: int = 2000, fleet_ticks: str = "synth",
+                arch: str = "qwen3-4b", variant: str = "smoke", seed: int = 0,
+                tick_sleep_ms: float = 1.0, teacher_latency: int = 2,
+                teacher_jitter: int = 1, teacher_loss: float = 0.0,
+                pending_capacity: int = 8, backpressure: str = "drop_oldest",
+                worker_capacity: int = None, migrate: bool = True,
+                drain: bool = True, snapshot_full_every: int = 8):
+    """Elastic fleet path (``--workers N``): spin ``workers`` multiplexer
+    worker subprocesses behind a shape-aware router
+    (``repro.runtime.elastic``), admit ``tenants`` tenants by
+    compiled-shape affinity, optionally live-migrate one mid-stream and
+    drain a whole worker (scale-in), then reconcile the fleet-wide
+    query-accounting identity across every migration."""
+    import time as time_mod
+
+    from repro.runtime import elastic
+    from repro.runtime import worker as worker_mod
+
+    if fleet_ticks == "decode":
+        # Real backbone decode ticks: each worker builds (and caches) the
+        # backbone once per distinct spec; n_in is the model dim.
+        odl_cfg = model_lib.core_config(configs.get_config(arch, variant))
+        ticks_spec = {"kind": "decode", "arch": arch, "variant": variant,
+                      "batch": batch, "prompt_len": 16, "max_len": 128,
+                      "seed": seed, "t_total": gen_tokens,
+                      "tick_sleep_ms": tick_sleep_ms}
+    else:
+        # Synthetic per-tick-seeded features: O(1) seek, identical bytes in
+        # any process — the migration-parity default.
+        from repro.core import drift as drift_mod
+        from repro.core import oselm, pruning
+
+        odl_cfg = engine.EngineConfig(
+            elm=oselm.OSELMConfig(n_in=16, n_hidden=16, n_out=4,
+                                  variant="hash", ridge=1e-2),
+            prune=pruning.PruneConfig(min_trained=1_000_000),
+            drift=drift_mod.DriftConfig(),
+        )
+        ticks_spec = None  # per-tenant (distinct seeds), built below
+
+    if worker_capacity is None:
+        # Spread evenly so same-shape tenants split into fused cohorts
+        # instead of all packing onto the first worker.
+        worker_capacity = max(1, -(-tenants // workers))
+
+    fleet = [elastic.spawn_worker(f"w{i}") for i in range(workers)]
+    router = elastic.Router(fleet, capacity=worker_capacity)
+    collected: dict = {}
+    try:
+        specs = []
+        for i in range(tenants):
+            spec = worker_mod.tenant_spec(
+                f"tenant{i}", odl_cfg, s=batch, mode="serve",
+                capacity=pending_capacity, backpressure=backpressure,
+                ticks=(ticks_spec or worker_mod.synth_ticks_spec(
+                    seed=seed + 100 + i, t_total=gen_tokens,
+                    tick_sleep_ms=tick_sleep_ms)),
+                teacher=worker_mod.latency_teacher_spec(
+                    n_out=odl_cfg.elm.n_out, latency=teacher_latency,
+                    jitter=teacher_jitter, loss=teacher_loss, seed=seed + i),
+            )
+            specs.append(spec)
+            w = router.admit(spec)
+            print(f"placed {spec['name']} -> {w.name} "
+                  f"(shape key {worker_mod.spec_shape_key(spec)})")
+
+        if migrate:
+            # Live migration: wait until tenant0 is mid-stream, then move it.
+            target = max(2, gen_tokens // 2)
+            deadline = time_mod.monotonic() + 300
+            while time_mod.monotonic() < deadline:
+                src = router.worker_of("tenant0")
+                st = src.status()
+                row = next((t for t in st["live"] if t["name"] == "tenant0"),
+                           None)
+                if row is None:
+                    print("tenant0 finished before the migration point "
+                          "(--tokens too small); continuing without migration")
+                    break
+                if row["t"] >= target:
+                    dst = router.migrate("tenant0")
+                    print(f"tenant0 migrated {src.name} -> {dst.name} "
+                          f"at tick >= {row['t']}")
+                    break
+                time_mod.sleep(0.02)
+
+        if drain and len(router.workers) > 1:
+            victim = router.workers[-1]
+            moved, finished = router.scale_in(victim)
+            collected.update(finished)
+            print(f"scale-in: drained {victim.name} "
+                  f"(migrated {moved or 'nothing'}; "
+                  f"{len(finished)} finished there)")
+
+        router.wait_finished([s["name"] for s in specs], timeout_s=600)
+
+        # Per-worker reports, then the fleet aggregate.
+        for w in router.workers:
+            report = w.report()
+            collected.update(report)
+            for name in sorted(report):
+                s = report[name]
+                recon = "ok" if s.get("reconciled") else "BROKEN"
+                print(f"{w.name}/{name}: queries {s['queries_issued']}"
+                      f"/{s['stream_steps']} "
+                      f"({100 * s['queries_issued'] / max(s['stream_steps'], 1):.1f}% "
+                      f"comm volume), labels {s['labels_applied']}, "
+                      f"dropped {s['queries_dropped']}, "
+                      f"lost {s['queries_lost']}, "
+                      f"coalesced {s['queries_coalesced']}, "
+                      f"reasked {s['tickets_reasked']}, accounting {recon}")
+        agg = elastic.reconcile(collected)
+        recon = "ok" if agg["reconciled"] else "BROKEN"
+        print(f"fleet aggregate: {len(collected)} tenant(s) over "
+              f"{workers} worker(s) -> {len(router.workers)} after scale-in; "
+              f"{agg['stream_steps']} steps, queries {agg['queries_issued']}, "
+              f"labels {agg['labels_applied']}, dropped "
+              f"{agg['queries_dropped']}, lost {agg['queries_lost']}, "
+              f"coalesced {agg['queries_coalesced']}, reasked "
+              f"{agg['tickets_reasked']}, accounting {recon}")
+        if not agg["reconciled"] or not all(agg["per_tenant"].values()):
+            raise AssertionError(
+                f"fleet query accounting does not reconcile: {agg}")
+        return agg["queries_issued"], agg["stream_steps"] - agg["queries_issued"]
+    finally:
+        router.close()
+
+
 def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 16,
           gen_tokens: int = 32, max_len: int = 128, seed: int = 0,
           teacher_latency: int = 1, teacher_jitter: int = 0,
@@ -457,7 +586,44 @@ def main(argv=None):
                     help="demo: quiesce+snapshot tenant0 mid-stream and "
                     "restore it into a second multiplexer behind a fresh "
                     "teacher connection")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="elastic fleet mode: spin this many multiplexer "
+                    "worker subprocesses behind the shape-aware router "
+                    "(repro.runtime.elastic); 0: single-process serve")
+    ap.add_argument("--fleet-ticks", default="synth",
+                    choices=("synth", "decode"),
+                    help="fleet tick source: synth (per-tick-seeded "
+                    "features, O(1) seek) or decode (each worker drives "
+                    "the real backbone)")
+    ap.add_argument("--fleet-tick-sleep", type=float, default=1.0,
+                    help="per-tick sleep in ms (keeps tenants mid-stream "
+                    "long enough to migrate)")
+    ap.add_argument("--worker-capacity", type=int, default=None,
+                    help="max live tenants per worker (default: spread "
+                    "--tenants evenly over --workers)")
+    ap.add_argument("--no-fleet-migrate", action="store_true",
+                    help="fleet mode: skip the mid-stream live migration")
+    ap.add_argument("--no-fleet-drain", action="store_true",
+                    help="fleet mode: skip the scale-in worker drain")
+    ap.add_argument("--snapshot-full-every", type=int, default=8,
+                    help="worker cadence saves ship only changed leaves; "
+                    "every k-th save is full (1: all saves full)")
     args = ap.parse_args(argv)
+    if args.workers:
+        return serve_fleet(
+            workers=args.workers, tenants=args.tenants, batch=args.batch,
+            gen_tokens=args.tokens, fleet_ticks=args.fleet_ticks,
+            arch=args.arch, variant=args.variant,
+            tick_sleep_ms=args.fleet_tick_sleep,
+            teacher_latency=args.teacher_latency,
+            teacher_jitter=args.teacher_jitter,
+            teacher_loss=args.teacher_loss,
+            pending_capacity=args.pending_capacity,
+            backpressure=args.backpressure,
+            worker_capacity=args.worker_capacity,
+            migrate=not args.no_fleet_migrate,
+            drain=not args.no_fleet_drain,
+            snapshot_full_every=args.snapshot_full_every)
     serve(args.arch, args.variant, batch=args.batch, gen_tokens=args.tokens,
           teacher_latency=args.teacher_latency, teacher_jitter=args.teacher_jitter,
           teacher_loss=args.teacher_loss, pending_capacity=args.pending_capacity,

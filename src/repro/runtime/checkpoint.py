@@ -1,27 +1,40 @@
-"""Sharded checkpointing: atomic, async, keep-k — no orbax in this container.
+"""Sharded checkpointing: atomic, async, keep-k, incremental — no orbax here.
 
 Layout (one directory per step):
     <dir>/step_000123/
-        MANIFEST.json     — tree structure, shapes, dtypes, write status
-        <leaf-path>.npy   — one file per pytree leaf (full logical array)
+        MANIFEST.json     — tree structure, save kind (full/delta), base step
+        <leaf-path>.npy   — one file per *written* pytree leaf
     <dir>/step_000123.tmp — staging dir, atomically renamed on completion
 
 Fault-tolerance properties:
   * atomic publish: readers never observe a partial checkpoint (rename(2));
   * async: `save_async` snapshots device arrays to host, then writes on a
     background thread so the train loop keeps stepping;
-  * keep-k garbage collection;
+  * keep-k garbage collection (delta-chain aware: a kept step's base chain
+    is never collected out from under it);
   * `latest_step` skips unpublished (crashed mid-write) checkpoints, so
     restart after a mid-save failure falls back to the previous good step —
     the restore path of the checkpoint/restart story.
 
+Incremental saves (``full_every > 1``): cadence snapshots of a streaming
+session re-serialize the full `P` slab (S·N²·4 bytes) every time even when
+auto-pruning skipped every query since the last save and nothing learned.
+A *delta* save writes only the leaves whose bytes changed since the last
+published step and records that step as its base; every ``full_every``-th
+save (and the first of a process, and any step-number rewind) is full.
+``restore`` transparently composes base+delta by walking the chain, so
+readers never know the difference.
+
 On multi-host TPU each host would write only its addressable shards; here
 (single CPU host) arrays are fully addressable and written whole, while the
-restore path re-shards to whatever mesh is active (runtime/elastic.py).
+restore path re-shards to whatever mesh is active (``rescale`` below — the
+same bytes restore onto any mesh, so growing or shrinking a device mesh is
+a restore with new NamedShardings, never a resharding pass over the bytes).
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -67,11 +80,39 @@ def _manifest_of(tree, path=()):
     return {"kind": "leaf", "path": "/".join(path)}
 
 
+def _leaf_paths(manifest):
+    if manifest["kind"] == "leaf":
+        yield manifest["path"]
+    elif manifest["kind"] == "dict":
+        for v in manifest["children"].values():
+            yield from _leaf_paths(v)
+    else:
+        for v in manifest["children"]:
+            yield from _leaf_paths(v)
+
+
+def _digest(arr: np.ndarray) -> str:
+    # dtype+shape fold in so a reshape/retype with identical bytes still
+    # counts as changed (the .npy on disk would differ).
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((arr.dtype.str, arr.shape)).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, full_every: int = 1):
         self.dir = directory
         self.keep = keep
+        # 1: every save is full (the pre-incremental behavior); k>1: one
+        # full save then k-1 deltas, repeating.
+        self.full_every = max(1, int(full_every))
         self._thread: Optional[threading.Thread] = None
+        # Digests of the last *published composed* tree, for delta diffing.
+        # In-memory only: a fresh process always starts with a full save.
+        self._published_step: Optional[int] = None
+        self._published_digests: dict = {}
+        self._since_full = 0
         os.makedirs(directory, exist_ok=True)
 
     # -- write ---------------------------------------------------------------
@@ -98,22 +139,67 @@ class CheckpointManager:
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        leaves = dict(_flatten(host_tree))
-        for path, leaf in leaves.items():
-            fn = os.path.join(tmp, "/".join(path).replace("/", "__") + ".npy")
-            np.save(fn, np.asarray(leaf))
-        manifest = {"step": step, "tree": _manifest_of(host_tree)}
+        blobs = {
+            "/".join(path): np.ascontiguousarray(np.asarray(leaf))
+            for path, leaf in _flatten(host_tree)
+        }
+        digests = {p: _digest(a) for p, a in blobs.items()}
+        # Re-writing a step (or rewinding) would make a delta its own base
+        # after the rmtree below — force full whenever step doesn't advance.
+        full = (
+            self.full_every <= 1
+            or self._published_step is None
+            or step <= self._published_step
+            or self._since_full >= self.full_every - 1
+        )
+        if full:
+            written = sorted(blobs)
+        else:
+            prev = self._published_digests
+            written = sorted(
+                p for p, d in digests.items() if prev.get(p) != d
+            )
+        for p in written:
+            fn = os.path.join(tmp, p.replace("/", "__") + ".npy")
+            np.save(fn, blobs[p])
+        manifest = {
+            "step": step,
+            "kind": "full" if full else "delta",
+            "base_step": None if full else self._published_step,
+            "tree": _manifest_of(host_tree),
+        }
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
             json.dump(manifest, f)
         shutil.rmtree(final, ignore_errors=True)
         os.rename(tmp, final)  # atomic publish
+        self._published_step = step
+        self._published_digests = digests
+        self._since_full = 0 if full else self._since_full + 1
         self._gc()
         return final
 
     def _gc(self) -> None:
+        if not self.keep:
+            return
         steps = self.all_steps()
-        for s in steps[: -self.keep] if self.keep else []:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+        kept = set(steps[-self.keep :])
+        # A kept delta is useless without its base chain: protect every
+        # step reachable through base_step links from a kept step.
+        protected = set()
+        frontier = list(kept)
+        while frontier:
+            s = frontier.pop()
+            if s in protected:
+                continue
+            protected.add(s)
+            base = self._manifest(s).get("base_step")
+            if base is not None and base not in protected:
+                frontier.append(base)
+        for s in steps:
+            if s not in protected:
+                shutil.rmtree(
+                    os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True
+                )
 
     # -- read ----------------------------------------------------------------
 
@@ -129,22 +215,52 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _manifest(self, step: int) -> dict:
+        with open(
+            os.path.join(self.dir, f"step_{step:09d}", "MANIFEST.json")
+        ) as f:
+            return json.load(f)
+
+    def _leaves_in(self, step: int) -> dict:
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        out = {}
+        for name in os.listdir(final):
+            if name.endswith(".npy"):
+                out[name[: -len(".npy")].replace("__", "/")] = os.path.join(
+                    final, name
+                )
+        return out
+
     def restore(self, step: Optional[int] = None, shardings=None):
         """Load a checkpoint; optionally place leaves with `shardings` (a
         pytree of NamedSharding matching the saved structure) — this is the
-        elastic-rescale entry point: the same bytes restore onto any mesh."""
+        elastic-rescale entry point: the same bytes restore onto any mesh.
+
+        A delta checkpoint composes transparently: leaves it did not write
+        are pulled from its base chain (pre-incremental checkpoints have no
+        ``kind`` field and read as full)."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        final = os.path.join(self.dir, f"step_{step:09d}")
-        with open(os.path.join(final, "MANIFEST.json")) as f:
-            manifest = json.load(f)
+        manifest = self._manifest(step)
+        needed = set(_leaf_paths(manifest["tree"]))
         leaves = {}
-        for name in os.listdir(final):
-            if name.endswith(".npy"):
-                leaves[name[: -len(".npy")].replace("__", "/")] = np.load(
-                    os.path.join(final, name)
+        cursor = step
+        while needed:
+            for p, fn in self._leaves_in(cursor).items():
+                if p in needed:
+                    leaves[p] = np.load(fn)
+                    needed.discard(p)
+            if not needed:
+                break
+            cur_manifest = manifest if cursor == step else self._manifest(cursor)
+            base = cur_manifest.get("base_step")
+            if base is None:
+                raise FileNotFoundError(
+                    f"step {step} is missing leaves {sorted(needed)[:4]}... "
+                    "and has no base checkpoint to compose them from"
                 )
+            cursor = base
         tree = _unflatten(leaves, manifest["tree"])
         if shardings is not None:
             tree = jax.tree.map(
@@ -153,3 +269,40 @@ class CheckpointManager:
                 shardings,
             )
         return step, tree
+
+
+# ---------------------------------------------------------------------------
+# Elastic mesh rescale: restore any checkpoint onto any mesh
+# ---------------------------------------------------------------------------
+#
+# Checkpoints store full logical arrays, so rescaling from N to M devices is
+# a restore with new NamedShardings — no resharding pass over the bytes.
+# (These lived in runtime/elastic.py before that module became the fleet
+# router; restore-onto-a-mesh is this module's domain.)
+
+
+def shardings_for_schema(schema, mesh):
+    """NamedSharding pytree for a param schema under `mesh`."""
+    from jax.sharding import NamedSharding
+
+    from repro.distributed import sharding as shd
+    from repro.models import layers as layers_lib
+
+    with shd.activate(mesh):
+        specs = layers_lib.param_specs(schema)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def reshard_tree(tree, mesh, specs):
+    """Move a live pytree onto `mesh` with PartitionSpecs `specs`."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), tree, specs
+    )
+
+
+def rescale(manager: CheckpointManager, schema, new_mesh, step=None):
+    """Restore the latest checkpoint onto a different-size mesh."""
+    shards = shardings_for_schema(schema, new_mesh)
+    return manager.restore(step=step, shardings=shards)

@@ -1,0 +1,474 @@
+"""One multiplexer worker of the elastic fleet: a ``Multiplexer`` behind a
+control socket.
+
+The elastic control plane (``runtime/elastic.py``) scales the multi-tenant
+runtime *horizontally*: N worker processes, each driving its own
+``engine.multiplex.Multiplexer``, with a router placing tenants by
+compiled-shape affinity and migrating them worker-to-worker over the
+snapshot wire codec (``engine.snapshot.encode_snapshot``).  This module is
+the worker half: the scheduler loop runs in the main thread, and a small
+control protocol — v2 binary frames, the same conventions as the RPC
+teacher wire (``engine/rpc.py``) — runs on a loopback socket:
+
+  * ``status``   — per-tenant load (tick-rate EMA, ring occupancy,
+    compiled-shape key — ``Multiplexer.load_report``) + finished names;
+  * ``admit``    — start a tenant from a JSON *spec* (below), optionally
+    restoring it from snapshot-wire bytes in the frame payload (the
+    receiving half of a live migration);
+  * ``extract``  — snapshot → remove a tenant (``Multiplexer.extract``
+    quiesces first only for teachers that can't snapshot); the reply payload
+    is the encoded snapshot and the header returns the spec, so the caller
+    can re-admit it anywhere (the sending half of a migration);
+  * ``result`` / ``report`` — finished tenants' final state/outputs/stats;
+  * ``shutdown`` — stop the scheduler loop (the router drains live tenants
+    off a worker *before* shutting it down — scale-in).
+
+Tenants cross the wire as **specs**, not objects: a JSON dict naming the
+engine config (``snapshot.config_to_dict``), the tick source, and the
+teacher, so both sides of a migration can rebuild identical Python objects.
+Tick sources are always seekable (``snapshot.ResumableTicks``) — the
+destination worker seeks to the snapshot's cursor, never replays ticks.
+Teacher kinds:
+
+  * ``latency`` — in-process ``stream.LatencyTeacher`` answering the same
+    deterministic rule as the RPC label server (``rpc.expected_label``).
+    Its internal state (RNG, inbox) travels inside the snapshot, so a
+    migrated tenant continues **bit-for-bit** the run it would have had
+    uninterrupted (the PR 4/6 lock, now across processes).
+  * ``rpc`` — a real label server endpoint; the worker keeps one shared
+    ``rpc.BatchedRpcClient`` per endpoint (as ``shared_rpc_teachers``
+    does).  Sockets cannot migrate, so in-flight tickets are re-asked on
+    the destination and metered as ``tickets_reasked``.
+
+Run standalone (the router spawns these as subprocesses)::
+
+    PYTHONPATH=src python -m repro.runtime.worker --port 0
+    # prints "PORT <p>" once listening
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import dataclasses
+import itertools
+import socket
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.engine import fleet as fleet_mod
+from repro.engine import multiplex, snapshot, stream
+
+TICK_KINDS = ("synth", "decode")
+TEACHER_KINDS = ("latency", "rpc")
+
+# Scheduler idle poll while the worker has no live tenants (waiting for the
+# router to admit some).
+_IDLE_SLEEP_S = 2e-3
+
+
+# ---------------------------------------------------------------------------
+# Tenant specs: tenants as JSON, rebuildable on either side of the wire
+# ---------------------------------------------------------------------------
+
+
+def tenant_spec(
+    name: str,
+    cfg,
+    s: int,
+    ticks: dict,
+    teacher: dict,
+    mode: str = "algo1",
+    capacity: int = 64,
+    backpressure: str = "drop_oldest",
+    collect: bool = False,
+    donate: Optional[bool] = None,
+) -> dict:
+    """Build a tenant spec dict.  ``cfg`` may be an ``EngineConfig`` or an
+    already-encoded ``config_to_dict`` dict."""
+    if not isinstance(cfg, dict):
+        cfg = snapshot.config_to_dict(cfg)
+    if ticks.get("kind") not in TICK_KINDS:
+        raise ValueError(f"unknown tick-source kind {ticks.get('kind')!r}; "
+                         f"choose one of {TICK_KINDS}")
+    if teacher.get("kind") not in TEACHER_KINDS:
+        raise ValueError(f"unknown teacher kind {teacher.get('kind')!r}; "
+                         f"choose one of {TEACHER_KINDS}")
+    return {
+        "name": name, "cfg": cfg, "s": int(s), "ticks": ticks,
+        "teacher": teacher, "mode": mode, "capacity": int(capacity),
+        "backpressure": backpressure, "collect": bool(collect),
+        "donate": donate,
+    }
+
+
+def spec_shape_key(spec: dict) -> str:
+    """The compiled-shape affinity key of a spec — computable router-side,
+    without building any engine objects; equals ``multiplex.shape_key`` of
+    the tenant the spec builds."""
+    return multiplex.shape_key(
+        snapshot.config_from_dict(spec["cfg"]),
+        spec.get("mode", "algo1"),
+        spec.get("donate"),
+        spec["s"],
+    )
+
+
+def synth_ticks_spec(seed: int, t_total: int, tick_sleep_ms: float = 0.0) -> dict:
+    return {"kind": "synth", "seed": int(seed), "t_total": int(t_total),
+            "tick_sleep_ms": float(tick_sleep_ms)}
+
+
+def latency_teacher_spec(n_out: int, latency: int = 1, jitter: int = 0,
+                         loss: float = 0.0, partial: float = 0.0,
+                         seed: int = 0) -> dict:
+    return {"kind": "latency", "n_out": int(n_out), "latency": int(latency),
+            "jitter": int(jitter), "loss": float(loss),
+            "partial": float(partial), "seed": int(seed)}
+
+
+def rpc_teacher_spec(host: str, port: int, timeout_s: float = 5.0,
+                     secret: Optional[str] = None, compress: bool = False) -> dict:
+    return {"kind": "rpc", "host": host, "port": int(port),
+            "timeout_s": float(timeout_s), "secret": secret,
+            "compress": bool(compress)}
+
+
+def _build_ticks(spec: dict, decode_cache: dict) -> snapshot.ResumableTicks:
+    t = spec["ticks"]
+    sleep_s = float(t.get("tick_sleep_ms", 0.0)) / 1e3
+    if t["kind"] == "synth":
+        # Per-tick seeded features: O(1) seek (no replay), identical in any
+        # process — the fleet tests' cross-process reference depends on it.
+        s, n_in = spec["s"], int(spec["cfg"]["elm"]["n_in"])
+        seed, t_total = int(t["seed"]), int(t["t_total"])
+
+        def factory(start):
+            for tick in range(start, t_total):
+                if sleep_s > 0:
+                    time.sleep(sleep_s)
+                rng = np.random.default_rng((seed, tick))
+                yield np.tanh(rng.normal(size=(s, n_in))).astype(np.float32)
+
+        return snapshot.ResumableTicks(factory)
+
+    # "decode": one backbone decode step per tick (the serve path's tick
+    # source).  The backbone is deterministic, so seek(k) replays the decode
+    # to tick k; params/prefill are built once per distinct backbone spec
+    # and shared by every tenant (and every seek) on this worker.
+    import jax
+
+    from repro import configs
+    from repro.launch import serve as serve_lib
+    from repro.models import model as model_lib
+
+    key_fields = ("arch", "variant", "batch", "prompt_len", "max_len", "seed")
+    cache_key = tuple(t.get(k) for k in key_fields)
+    entry = decode_cache.get(cache_key)
+    if entry is None:
+        cfg = configs.get_config(t["arch"], t.get("variant", "smoke"))
+        key = jax.random.PRNGKey(int(t.get("seed", 0)))
+        params = model_lib.layers.init_params(model_lib.build_schema(cfg), key)
+        prompts = jax.random.randint(
+            key, (int(t["batch"]), int(t.get("prompt_len", 16))), 0,
+            cfg.vocab_size,
+        )
+        _, state = jax.jit(
+            lambda p, tok: model_lib.prefill(p, tok, cfg, max_len=int(t.get("max_len", 128)))
+        )(params, prompts)
+        entry = decode_cache[cache_key] = (cfg, params, state, prompts)
+    cfg, params, state, prompts = entry
+    t_total = int(t["t_total"])
+
+    def factory(start):
+        it = itertools.islice(
+            serve_lib._decode_feats(params, state, prompts, cfg, t_total),
+            start, None,
+        )
+        for x in it:
+            if sleep_s > 0:
+                time.sleep(sleep_s)
+            yield x
+
+    return snapshot.ResumableTicks(factory)
+
+
+def _build_teacher(spec: dict, rpc_clients: dict):
+    t = spec["teacher"]
+    if t["kind"] == "latency":
+        from repro.engine.rpc import expected_label  # the deterministic rule
+
+        n_out = int(t["n_out"])
+
+        def label_fn(tick, feats, n_out=n_out):
+            s = int(np.asarray(feats).shape[0])
+            return np.asarray(
+                [expected_label(tick, i, n_out) for i in range(s)], np.int32
+            )
+
+        return stream.LatencyTeacher(
+            label_fn=label_fn, latency=int(t.get("latency", 1)),
+            jitter=int(t.get("jitter", 0)), loss_prob=float(t.get("loss", 0.0)),
+            partial_prob=float(t.get("partial", 0.0)), seed=int(t.get("seed", 0)),
+        )
+    # "rpc": one shared batched connection per endpoint for the whole
+    # worker; per-tenant handles demux replies (multiplex.shared_rpc_teachers
+    # semantics, cached worker-side so migrations reuse the socket).
+    from repro.engine import rpc
+
+    key = (t["host"], int(t["port"]))
+    client = rpc_clients.get(key)
+    if client is None:
+        client = rpc_clients[key] = rpc.BatchedRpcClient(
+            t["host"], int(t["port"]), timeout_s=float(t.get("timeout_s", 5.0)),
+            secret=t.get("secret"), compress=bool(t.get("compress", False)),
+        )
+    return client.tenant(name=spec["name"])
+
+
+def _stats_to_wire(stats: stream.StreamStats) -> dict:
+    """Every StreamStats field as JSON-able values (deques become lists)."""
+    out = {}
+    for f in dataclasses.fields(stream.StreamStats):
+        v = getattr(stats, f.name)
+        if f.name in ("tick_ms", "label_latency_ticks"):
+            out[f.name] = [float(x) for x in v]
+        else:
+            out[f.name] = v
+    out["reconciled"] = stats.reconciled
+    return out
+
+
+def stats_from_wire(d: dict) -> stream.StreamStats:
+    stats = stream.StreamStats()
+    for k, v in d.items():
+        if k == "reconciled":
+            continue
+        if k in ("tick_ms", "label_latency_ticks"):
+            getattr(stats, k).extend(v)
+        else:
+            setattr(stats, k, type(getattr(stats, k))(v))
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# The worker
+# ---------------------------------------------------------------------------
+
+
+class Worker:
+    """A ``Multiplexer`` wrapped in a control-socket server.
+
+    The scheduler runs in whatever thread calls :meth:`serve_forever`;
+    control connections are handled one thread each, and every command
+    takes the scheduler lock, so admits/extracts land exactly between
+    scheduler rounds — the same boundary in-process migration uses.
+    """
+
+    def __init__(
+        self,
+        name: str = "worker",
+        host: str = "127.0.0.1",
+        port: int = 0,
+        quantum: int = multiplex.DEFAULT_QUANTUM,
+        sched: str = "rr",
+        fuse: bool = True,
+        pending: str = "auto",
+        snapshot_dir: Optional[str] = None,
+        snapshot_every: int = 0,
+        snapshot_full_every: int = 8,
+    ):
+        self.name = name
+        self.mux = multiplex.Multiplexer(
+            [], quantum=quantum, sched=sched, fuse=fuse, pending=pending,
+            snapshot_dir=snapshot_dir, snapshot_every=snapshot_every,
+            snapshot_full_every=snapshot_full_every,
+        )
+        self._specs: dict[str, dict] = {}
+        self._decode_cache: dict = {}
+        self._rpc_clients: dict = {}
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._sock = socket.create_server((host, port))
+        self.host, self.port = self._sock.getsockname()[:2]
+        self._conns: list[socket.socket] = []
+        self._threads: list[threading.Thread] = []
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, daemon=True
+        )
+        self._accept_thread.start()
+
+    # -- scheduler loop ----------------------------------------------------
+
+    def serve_forever(self) -> None:
+        """Drive the multiplexer until ``shutdown`` arrives.  An idle worker
+        (no live tenants) keeps polling — the router admits tenants at any
+        time."""
+        while not self._stop.is_set():
+            with self._lock:
+                live = self.mux.round()
+            if not live:
+                time.sleep(_IDLE_SLEEP_S)
+
+    def close(self) -> None:
+        self._stop.set()
+        from repro.engine.rpc import _shutdown_socket
+
+        _shutdown_socket(self._sock)
+        for conn in list(self._conns):
+            _shutdown_socket(conn)
+        for t in self._threads:
+            t.join(timeout=5)
+        for client in self._rpc_clients.values():
+            with contextlib.suppress(Exception):
+                client.close()
+
+    # -- control protocol --------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return  # listener closed
+            self._conns.append(conn)
+            t = threading.Thread(target=self._serve_conn, args=(conn,), daemon=True)
+            self._threads.append(t)
+            t.start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        from repro.engine import rpc
+
+        f = conn.makefile("rb")
+        try:
+            for kind, header, payload in rpc._iter_wire(f):
+                if kind != "v2":
+                    continue  # this port speaks only the control protocol
+                reply, reply_payload = self._handle(header, payload)
+                reply["payload_len"] = len(reply_payload)
+                conn.sendall(rpc._encode_frame(reply, reply_payload))
+                if header.get("kind") == "shutdown":
+                    break
+        except (EOFError, OSError, ValueError):
+            pass  # dropped controller connection; worker keeps serving
+        finally:
+            rpc._shutdown_socket(conn)
+            with contextlib.suppress(ValueError):
+                self._conns.remove(conn)
+
+    def _handle(self, header: dict, payload: bytes) -> tuple[dict, bytes]:
+        cmd = header.get("kind")
+        try:
+            with self._lock:
+                if cmd == "status":
+                    return self._status(), b""
+                if cmd == "admit":
+                    return self._admit(header["spec"], payload), b""
+                if cmd == "extract":
+                    return self._extract(header["name"])
+                if cmd == "result":
+                    return self._result(header["name"])
+                if cmd == "report":
+                    return {
+                        "kind": "report_ok",
+                        "results": {
+                            name: _stats_to_wire(r.stats)
+                            for name, r in self.mux.finished_results().items()
+                        },
+                    }, b""
+                if cmd == "shutdown":
+                    self._stop.set()
+                    return {"kind": "ok"}, b""
+            return {"kind": "error",
+                    "error": f"unknown control command {cmd!r}"}, b""
+        except Exception as e:  # command errors must not kill the worker
+            return {"kind": "error", "error": f"{type(e).__name__}: {e}"}, b""
+
+    def _status(self) -> dict:
+        return {
+            "kind": "status_ok",
+            "worker": self.name,
+            "live": self.mux.load_report(),
+            "finished": sorted(self.mux.finished_results()),
+        }
+
+    def _admit(self, spec: dict, payload: bytes) -> dict:
+        tree = snapshot.decode_snapshot(payload) if payload else None
+        cfg = snapshot.config_from_dict(spec["cfg"])
+        tenant = multiplex.Tenant(
+            name=spec["name"],
+            # A migrated-in tenant's state rides the snapshot.
+            state=None if tree is not None else fleet_mod.init_fleet(cfg, spec["s"]),
+            ticks=_build_ticks(spec, self._decode_cache),
+            cfg=cfg,
+            teacher=_build_teacher(spec, self._rpc_clients),
+            mode=spec.get("mode", "algo1"),
+            capacity=spec.get("capacity", 64),
+            backpressure=spec.get("backpressure", "drop_oldest"),
+            collect=spec.get("collect", False),
+            donate=spec.get("donate"),
+        )
+        self.mux.admit(tenant, snapshot=tree)
+        self._specs[spec["name"]] = spec
+        return {"kind": "ok", "name": spec["name"],
+                "migrated": tree is not None}
+
+    def _extract(self, name: str) -> tuple[dict, bytes]:
+        tree, _it = self.mux.extract(name)
+        # The partially-consumed iterator stays behind: specs only build
+        # seekable sources, so the destination seeks to the snapshot cursor.
+        spec = self._specs.pop(name)
+        wire = snapshot.encode_snapshot(tree)
+        return {"kind": "snapshot_ok", "spec": spec,
+                "t": snapshot.ticks_consumed(tree)}, wire
+
+    def _result(self, name: str) -> tuple[dict, bytes]:
+        results = self.mux.finished_results()
+        if name not in results:
+            raise KeyError(f"tenant {name!r} has no finished result here")
+        r = results[name]
+        tree: dict = {"state": snapshot.state_to_tree(r.state)}
+        if r.outputs is not None:
+            tree["outputs"] = {
+                k: np.asarray(v) for k, v in r.outputs._asdict().items()
+            }
+        wire = snapshot.encode_snapshot(tree)
+        return {"kind": "result_ok", "stats": _stats_to_wire(r.stats)}, wire
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="control port (0: ephemeral, printed as 'PORT <p>')")
+    ap.add_argument("--name", default="worker")
+    ap.add_argument("--quantum", type=int, default=multiplex.DEFAULT_QUANTUM)
+    ap.add_argument("--sched", default="rr", choices=multiplex.SCHEDULERS)
+    ap.add_argument("--fuse-cohorts", default="on", choices=("on", "off"))
+    ap.add_argument("--pending", default="auto", choices=snapshot.PENDING_POLICIES,
+                    help="how admits-from-wire handle in-flight tickets")
+    ap.add_argument("--snapshot-dir", default=None)
+    ap.add_argument("--snapshot-every", type=int, default=0)
+    ap.add_argument("--snapshot-full-every", type=int, default=8,
+                    help="cadence saves ship only changed leaves; every k-th "
+                    "save is full (1: all saves full)")
+    args = ap.parse_args(argv)
+    worker = Worker(
+        name=args.name, host=args.host, port=args.port, quantum=args.quantum,
+        sched=args.sched, fuse=args.fuse_cohorts == "on", pending=args.pending,
+        snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
+        snapshot_full_every=args.snapshot_full_every,
+    )
+    print(f"PORT {worker.port}", flush=True)
+    try:
+        worker.serve_forever()
+    finally:
+        worker.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -178,3 +178,90 @@ def test_token_stream_determinism_and_sharding():
     h1 = TokenStream(TokenStreamConfig(128, 16, 8, n_hosts=2, host=1)).batch(3)
     assert h0["tokens"].shape == (4, 16)
     assert not (h0["tokens"] == h1["tokens"]).all()
+
+
+# ---------------------------------------------------------------------------
+# Incremental (delta) checkpoints
+# ---------------------------------------------------------------------------
+
+
+def _npy_names(tmp_path, step):
+    d = tmp_path / f"step_{step:09d}"
+    return sorted(n for n in os.listdir(d) if n.endswith(".npy"))
+
+
+def test_delta_save_writes_only_changed_leaves(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=4, full_every=4)
+    t1 = _tree(1.0)
+    mgr.save(1, t1)
+    assert len(_npy_names(tmp_path, 1)) == 4  # first save of a process: full
+    # Change just one leaf: the delta ships one file, not four.
+    t2 = jax.tree.map(lambda a: a, t1)
+    t2["params"]["b"] = jnp.ones((4,))
+    mgr.save(2, t2)
+    assert _npy_names(tmp_path, 2) == ["params__b.npy"]
+    # Restore composes base+delta transparently.
+    step, tree = mgr.restore()
+    assert step == 2
+    np.testing.assert_allclose(tree["params"]["b"], 1.0)
+    np.testing.assert_allclose(tree["params"]["w"], 1.0)
+    assert isinstance(tree["opt"], tuple)
+
+
+def test_delta_chain_and_periodic_full(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=10, full_every=3)
+    tree = _tree(0.0)
+    for s in range(1, 7):
+        tree = jax.tree.map(
+            lambda a: a + 1 if a.dtype != jnp.int32 else a, tree
+        )
+        mgr.save(s, tree)
+    # full, delta, delta, full, delta, delta
+    kinds = [mgr._manifest(s)["kind"] for s in range(1, 7)]
+    assert kinds == ["full", "delta", "delta", "full", "delta", "delta"]
+    for s in range(1, 7):
+        step, t = mgr.restore(step=s)
+        np.testing.assert_allclose(t["params"]["w"], float(s))
+
+
+def test_delta_gc_protects_base_chain(tmp_path):
+    """keep-k must never collect a base a kept delta still needs."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, full_every=10)
+    tree = _tree(0.0)
+    for s in range(1, 6):
+        tree = jax.tree.map(
+            lambda a: a + 1 if a.dtype != jnp.int32 else a, tree
+        )
+        mgr.save(s, tree)
+    steps = mgr.all_steps()
+    # The kept window is [4, 5]; their delta chains reach back through
+    # every prior delta to the full at step 1, so nothing was collected.
+    assert steps == [1, 2, 3, 4, 5]
+    step, t = mgr.restore()
+    assert step == 5
+    np.testing.assert_allclose(t["params"]["w"], 5.0)
+
+
+def test_delta_rewind_forces_full(tmp_path):
+    """Re-saving an already-published step must not become its own base."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, full_every=8)
+    mgr.save(1, _tree(1.0))
+    mgr.save(2, _tree(2.0))
+    assert mgr._manifest(2)["kind"] == "delta"
+    mgr.save(2, _tree(3.0))  # rewind/re-save
+    assert mgr._manifest(2)["kind"] == "full"
+    step, t = mgr.restore()
+    np.testing.assert_allclose(t["params"]["w"], 3.0)
+
+
+def test_unchanged_tree_delta_is_manifest_only(tmp_path):
+    """The motivating case: nothing learned since the last save, so the
+    cadence snapshot ships zero leaf bytes."""
+    mgr = CheckpointManager(str(tmp_path), keep=4, full_every=4)
+    t = _tree(1.0)
+    mgr.save(1, t)
+    mgr.save(2, t)
+    assert _npy_names(tmp_path, 2) == []
+    step, tree = mgr.restore()
+    assert step == 2
+    np.testing.assert_allclose(tree["params"]["w"], 1.0)

@@ -1,0 +1,327 @@
+"""Elastic control-plane tests: cross-process live migration over the
+snapshot wire codec, worker drain (scale-in), and shape-affinity routing.
+
+The migration lock: a tenant extracted on worker A, shipped over the wire,
+and admitted on worker B must be **bit-for-bit identical** — final engine
+state and every deterministic counter — to the same tenant run solo,
+uninterrupted, in this process.  Per-tick-seeded synth features and the
+snapshot-carried LatencyTeacher state make that comparable across
+processes.
+"""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import drift as drift_mod
+from repro.core import oselm, pruning
+from repro.engine import snapshot, stream
+from repro.runtime import elastic
+from repro.runtime import worker as worker_mod
+
+# Wall-clock fields (tick_ms, wall_s, tick_rate_ema, ring HWM timing) can't
+# match across runs; everything here must.
+DETERMINISTIC_STATS = (
+    "ticks", "stream_steps", "tickets_issued", "queries_issued",
+    "labels_applied", "tickets_dropped", "queries_dropped",
+    "replies_orphaned", "tickets_lost", "queries_lost",
+    "tickets_coalesced", "queries_coalesced", "asks_deferred",
+    "tickets_reasked",
+)
+
+T_TOTAL = 400
+# Migrate once every tenant has passed this tick.  Low on purpose: the
+# source worker keeps streaming while earlier tenants quiesce, so the last
+# extract must still land well before T_TOTAL.
+CUT_AT = 40
+
+
+def _cfg():
+    return engine.EngineConfig(
+        elm=oselm.OSELMConfig(
+            n_in=24, n_hidden=16, n_out=4, variant="hash", ridge=1e-2
+        ),
+        prune=pruning.PruneConfig(min_trained=1_000_000),
+        drift=drift_mod.DriftConfig(),
+    )
+
+
+def _spec(name, policy, seed, tick_sleep_ms=3.0):
+    return worker_mod.tenant_spec(
+        name, _cfg(), s=4, mode="train_phase", capacity=4,
+        backpressure=policy,
+        ticks=worker_mod.synth_ticks_spec(
+            seed=seed, t_total=T_TOTAL, tick_sleep_ms=tick_sleep_ms
+        ),
+        teacher=worker_mod.latency_teacher_spec(
+            n_out=4, latency=2, jitter=2, loss=0.2, partial=0.15, seed=seed
+        ),
+    )
+
+
+def _solo_reference(spec):
+    """The uninterrupted run the migrated tenant must reproduce, built from
+    the *same spec builders* the workers use (sleep stripped: tick values
+    depend only on (seed, tick))."""
+    solo = dict(spec, ticks=dict(spec["ticks"], tick_sleep_ms=0.0))
+    it = iter(worker_mod._build_ticks(solo, {}))
+    teacher = worker_mod._build_teacher(solo, {})
+    cfg = snapshot.config_from_dict(solo["cfg"])
+    sess = stream.StreamSession(
+        engine.init_fleet(cfg, solo["s"]), cfg, teacher, mode=solo["mode"],
+        capacity=solo["capacity"], backpressure=solo["backpressure"],
+    )
+    sess.start(next(it))
+    while sess._p is not None:
+        sess.advance(next(it, None))
+    sess.drain_replies()
+    state, _, stats = sess.finish()
+    return state, stats
+
+
+def _assert_state_trees_equal(a, b, msg):
+    from repro.runtime import checkpoint as ckpt
+
+    fa, fb = dict(ckpt._flatten(a)), dict(ckpt._flatten(b))
+    assert sorted(fa) == sorted(fb), f"{msg}: leaf sets differ"
+    for path in fa:
+        xa, xb = np.asarray(fa[path]), np.asarray(fb[path])
+        assert xa.dtype == xb.dtype and xa.tobytes() == xb.tobytes(), (
+            f"{msg}: state leaf {'/'.join(path)} diverged"
+        )
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    """Two worker subprocesses shared by every test in this module (each
+    spawn pays the worker's jax import).  quantum=1 keeps the mux lock
+    hold per round short (~one tick per member), so control commands —
+    the four back-to-back extracts especially — don't queue behind whole
+    scheduler rounds while the source tenants race toward T_TOTAL."""
+    workers = [elastic.spawn_worker(f"tw{i}", quantum=1) for i in range(2)]
+    yield workers
+    for w in workers:
+        w.close(shutdown=True)
+
+
+def _wait_live_at(client, names, tick, timeout_s=120.0):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        rows = {t["name"]: t for t in client.status()["live"]}
+        if any(n not in rows for n in names):
+            raise AssertionError(
+                f"tenant finished before the migration point: have {sorted(rows)}"
+            )
+        if all(rows[n]["t"] >= tick for n in names):
+            return rows
+        time.sleep(0.01)
+    raise TimeoutError(f"{names} never reached tick {tick}")
+
+
+def test_migrate_bit_for_bit_all_policies(fleet):
+    """ALL FOUR backpressure policies, concurrently (they fuse into one
+    cohort on the source worker): extract on worker A mid-stream, ship the
+    wire bytes through this process, admit on worker B — final state and
+    deterministic stats equal the uninterrupted solo run."""
+    w_a, w_b = fleet
+    specs = {
+        policy: _spec(f"mig_{policy}", policy, seed=300 + i)
+        for i, policy in enumerate(stream.BACKPRESSURE_POLICIES)
+    }
+    for spec in specs.values():
+        w_a.admit(spec)
+    names = [s["name"] for s in specs.values()]
+    _wait_live_at(w_a, names, CUT_AT)
+
+    for policy, spec in specs.items():
+        sent_spec, wire = w_a.extract(spec["name"])
+        # The spec crossed a JSON boundary (tuples become lists); compare
+        # JSON-normalized.
+        assert sent_spec == json.loads(json.dumps(spec))
+        assert isinstance(wire, bytes) and len(wire) > 0
+        cut = snapshot.ticks_consumed(snapshot.decode_snapshot(wire))
+        assert CUT_AT <= cut < T_TOTAL, f"{policy}: cut at {cut} not mid-stream"
+        reply = w_b.admit(sent_spec, wire)
+        assert reply["migrated"] is True
+
+    router = elastic.Router(list(fleet))
+    router.wait_finished(names, timeout_s=180)
+
+    for policy, spec in specs.items():
+        stats_wire, tree = w_b.result(spec["name"])
+        solo_state, solo_stats = _solo_reference(spec)
+        _assert_state_trees_equal(
+            snapshot.state_to_tree(solo_state), tree["state"],
+            f"policy {policy}"
+        )
+        for f in DETERMINISTIC_STATS:
+            assert stats_wire[f] == getattr(solo_stats, f), (
+                f"policy {policy}: stats.{f} diverged: "
+                f"{stats_wire[f]} != {getattr(solo_stats, f)}"
+            )
+        assert stats_wire["label_latency_ticks"] == list(
+            solo_stats.label_latency_ticks
+        ), f"policy {policy}: label latency history diverged"
+        assert stats_wire["reconciled"], f"policy {policy}: accounting broke"
+        # Latency-teacher state rides the snapshot: nothing was re-asked.
+        assert stats_wire["tickets_reasked"] == 0
+
+
+def test_drain_worker_to_zero_preserves_fleet_identity(fleet):
+    """Scale-in: every live tenant on a 4-tenant worker migrates off (the
+    worker drains to zero), and the fleet-wide query-accounting identity
+    still reconciles after the moves."""
+    w_extra = elastic.spawn_worker("tw_drain", quantum=1)
+    router = elastic.Router(list(fleet) + [w_extra])
+    names = []
+    try:
+        for i in range(4):
+            spec = _spec(f"drain{i}", "drop_oldest", seed=500 + i)
+            names.append(spec["name"])
+            w_extra.admit(spec)
+        _wait_live_at(w_extra, names, 10)  # all mid-stream
+        migrated, finished_there = router.scale_in(w_extra)
+        assert sorted(migrated) == sorted(names), (
+            f"drain left tenants behind: moved {migrated}"
+        )
+        assert w_extra not in router.workers
+        assert not finished_there  # all were live when the drain started
+        # The drained worker's subprocess actually exited.
+        assert w_extra.proc.wait(timeout=30) == 0
+
+        router.wait_finished(names, timeout_s=180)
+        results = {
+            n: s for n, s in router.fleet_results().items() if n in names
+        }
+        assert sorted(results) == sorted(names)
+        agg = elastic.reconcile(results)
+        assert agg["reconciled"], f"fleet identity broke: {agg}"
+        assert all(agg["per_tenant"].values())
+        assert agg["queries_issued"] > 0  # the identity wasn't vacuous
+        assert agg["queries_issued"] == (
+            agg["labels_applied"] + agg["queries_dropped"]
+            + agg["queries_lost"] + agg["queries_coalesced"]
+        )
+    finally:
+        if w_extra in router.workers:
+            w_extra.close(shutdown=True)
+
+
+def test_worker_status_reports_load_signals(fleet):
+    """The router's placement inputs — tick-rate EMA, ring occupancy HWM,
+    shape key — are live in the worker status while a tenant streams."""
+    w_a, _ = fleet
+    spec = _spec("load_probe", "drop_oldest", seed=900)
+    w_a.admit(spec)
+    rows = _wait_live_at(w_a, ["load_probe"], 30)
+    row = rows["load_probe"]
+    assert row["shape_key"] == worker_mod.spec_shape_key(spec)
+    assert row["tick_rate_ema"] > 0
+    assert row["ring_capacity"] == spec["capacity"]
+    assert 0 <= row["ring"] <= row["ring_capacity"]
+    assert row["ring_hwm"] >= 1  # train_phase mode queries every tick
+    assert row["s"] == spec["s"]
+    elastic.Router(list(fleet)).wait_finished(["load_probe"], timeout_s=120)
+
+
+def test_unknown_tenant_errors_do_not_kill_worker(fleet):
+    w_a, _ = fleet
+    with pytest.raises(elastic.WorkerError):
+        w_a.extract("no_such_tenant")
+    with pytest.raises(elastic.WorkerError):
+        w_a.result("no_such_tenant")
+    assert w_a.status()["kind"] == "status_ok"  # connection still live
+
+
+# ---------------------------------------------------------------------------
+# Router placement logic (stub workers, no subprocesses)
+# ---------------------------------------------------------------------------
+
+
+class _StubWorker:
+    def __init__(self, name, live=()):
+        self.name = name
+        self.live = list(live)
+
+    def status(self):
+        return {"kind": "status_ok", "worker": self.name,
+                "live": list(self.live), "finished": []}
+
+    def admit(self, spec, snapshot_wire=b""):
+        self.live.append(_row(spec["name"], worker_mod.spec_shape_key(spec),
+                              s=spec["s"]))
+        return {"kind": "ok", "name": spec["name"],
+                "migrated": bool(snapshot_wire)}
+
+
+def _row(name, key, s=4, ema=100.0, draining=False):
+    return {"name": name, "t": 10, "s": s, "shape_key": key,
+            "tick_rate_ema": ema, "ring": 0, "ring_hwm": 0,
+            "ring_capacity": 4, "queries_issued": 0, "labels_applied": 0,
+            "draining": draining, "fused": False}
+
+
+def test_router_places_by_shape_affinity_under_capacity():
+    """Four same-shape tenants over two capacity-2 workers split 2+2 (two
+    fusable pairs), not 4+0 or 1+1+1+1 round-robin."""
+    w0, w1 = _StubWorker("w0"), _StubWorker("w1")
+    router = elastic.Router([w0, w1], capacity=2)
+    placed = [router.admit(_spec(f"a{i}", "drop_oldest", seed=i)).name
+              for i in range(4)]
+    assert placed == ["w0", "w0", "w1", "w1"]
+
+
+def test_router_prefers_affinity_over_emptier_worker():
+    """A tenant whose shape key matches tenants on a busier (but
+    under-capacity) worker goes there — cohort fusion beats spreading."""
+    spec_a = _spec("x", "drop_oldest", seed=1)
+    key_a = worker_mod.spec_shape_key(spec_a)
+    w0 = _StubWorker("w0", [_row("t0", key_a), _row("t1", key_a)])
+    w1 = _StubWorker("w1")
+    router = elastic.Router([w0, w1], capacity=8)
+    assert router.place(_spec("x2", "drop_oldest", seed=2)).name == "w0"
+    # A different-shaped tenant prefers the empty worker instead.
+    other = worker_mod.tenant_spec(
+        "y", _cfg(), s=8, mode="train_phase",
+        ticks=worker_mod.synth_ticks_spec(seed=3, t_total=10),
+        teacher=worker_mod.latency_teacher_spec(n_out=4),
+    )
+    assert worker_mod.spec_shape_key(other) != key_a
+    assert router.place(other).name == "w1"
+
+
+def test_router_capacity_spills_before_affinity():
+    """Affinity never overrides capacity: a full worker is skipped even if
+    every tenant on it matches."""
+    spec = _spec("z", "drop_oldest", seed=4)
+    key = worker_mod.spec_shape_key(spec)
+    w0 = _StubWorker("w0", [_row("t0", key), _row("t1", key)])
+    w1 = _StubWorker("w1")
+    router = elastic.Router([w0, w1], capacity=2)
+    assert router.place(spec).name == "w1"
+
+
+def test_router_draining_tenants_do_not_attract():
+    """A tenant that has exhausted its ticks (draining replies) is not a
+    fusion partner — placement ignores it for affinity."""
+    spec = _spec("q", "drop_oldest", seed=5)
+    key = worker_mod.spec_shape_key(spec)
+    w0 = _StubWorker("w0", [_row("t0", key, draining=True)])
+    w1 = _StubWorker("w1")
+    router = elastic.Router([w0, w1], capacity=8)
+    # Tie on affinity (none) -> fewest live tenants wins.
+    assert router.place(spec).name == "w1"
+
+
+def test_reconcile_flags_broken_identity():
+    ok = {"queries_issued": 10, "labels_applied": 7, "queries_dropped": 1,
+          "queries_lost": 1, "queries_coalesced": 1, "reconciled": True}
+    bad = dict(ok, labels_applied=6, reconciled=False)
+    agg = elastic.reconcile({"a": ok})
+    assert agg["reconciled"] and agg["per_tenant"]["a"]
+    agg = elastic.reconcile({"a": ok, "b": bad})
+    assert not agg["reconciled"]
+    assert not agg["per_tenant"]["b"]

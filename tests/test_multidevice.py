@@ -130,21 +130,21 @@ def test_elastic_reshard_checkpoint():
         from repro.distributed import sharding
         from repro.launch.mesh import make_dev_mesh
         from repro.models import model as M, layers
+        from repro.runtime import checkpoint
         from repro.runtime.checkpoint import CheckpointManager
-        from repro.runtime import elastic
 
         cfg = configs.get_config('qwen3-4b', 'smoke')
         schema = M.build_schema(cfg)
         mesh_a = make_dev_mesh(4, 2)
         with sharding.activate(mesh_a):
             params = layers.init_params(schema, jax.random.PRNGKey(0))
-            params = elastic.reshard_tree(params, mesh_a, layers.param_specs(schema))
+            params = checkpoint.reshard_tree(params, mesh_a, layers.param_specs(schema))
 
         with tempfile.TemporaryDirectory() as d:
             mgr = CheckpointManager(d, keep=1)
             mgr.save(1, params)
             mesh_b = make_dev_mesh(2, 2)  # "half the fleet died"
-            step, restored = elastic.rescale(mgr, schema, mesh_b)
+            step, restored = checkpoint.rescale(mgr, schema, mesh_b)
             assert step == 1
             for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
                 np.testing.assert_allclose(np.asarray(a), np.asarray(b))
