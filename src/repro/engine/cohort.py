@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.engine import fleet, stream
 from repro.engine.types import EngineState
+from repro.runtime import telemetry as _telemetry
 
 _COL_KEYS = ("pred", "outputs", "queried", "theta", "confidence", "mode_training")
 
@@ -180,6 +181,8 @@ class CohortSession:
         actually advanced a tick (False for the all-start first tick).
         """
         t0 = time.perf_counter()
+        tel = _telemetry.TELEMETRY
+        tok = tel.tracer.begin("cohort.tick") if tel is not None else None
         members = list(self.members)
         assert len(nxts) == len(members), "one next-tick entry per member"
         # Keep next-tick features on the host: one np.concatenate + ONE
@@ -349,6 +352,10 @@ class CohortSession:
                     else st.tick_rate_ema
                     + stream.TICK_RATE_EMA_ALPHA * (rate - st.tick_rate_ema)
                 )
+        if tok is not None:
+            tel.tracer.end(
+                tok, members=len(members), s=self.total, detached=len(detached)
+            )
         return detached, bool(ticking)
 
     # -- internals ---------------------------------------------------------

@@ -98,6 +98,7 @@ from repro.engine import snapshot as snapshot_mod
 from repro.engine import stream
 from repro.engine.types import EngineConfig, EngineState, FleetStepOutput
 from repro.runtime import fault
+from repro.runtime import telemetry as _telemetry
 from repro.runtime.checkpoint import CheckpointManager
 
 SCHEDULERS = ("rr", "drr")
@@ -307,6 +308,9 @@ class _Slot:
                 collect=tenant.collect,
                 donate=tenant.donate,
             )
+        # Telemetry series for this tenant key on its name (worker/serve
+        # layers add their own labels at scrape time).
+        self.session.telemetry_labels = {"tenant": tenant.name}
         # Tick cost for the deficit scheduler = this tenant's stream count.
         self.s = int(np.shape(np.asarray(self.session.state.elm.count))[0])
         self.deficit = 0.0
@@ -551,6 +555,8 @@ class Multiplexer:
         ``extract`` returned, not a fresh tick-0 source)."""
         if any(s.tenant.name == tenant.name for s in self._slots):
             raise ValueError(f"tenant name {tenant.name!r} already admitted")
+        tel = _telemetry.TELEMETRY
+        tok = tel.tracer.begin("migrate.admit") if tel is not None else None
         slot = _Slot(
             tenant,
             manager=self._manager_for(tenant.name),
@@ -563,6 +569,11 @@ class Multiplexer:
         self._slots.append(slot)
         self._live.append(slot)
         self.agg.n_tenants = len(self._slots)
+        if tok is not None:
+            tel.tracer.end(
+                tok, tenant=tenant.name, restored=snapshot is not None
+            )
+            tel.registry.count("odl_mux_admits")
 
     def _slot(self, name: str) -> _Slot:
         for s in self._slots:
@@ -617,6 +628,25 @@ class Multiplexer:
             })
         return out
 
+    def sync_telemetry(self) -> None:
+        """Mirror every tenant's ``StreamStats`` (live sessions and
+        finished results alike) into the enabled registry — the pull half
+        of the one-source-of-truth design.  Called by live scrapes
+        (``runtime/worker.py`` ``metrics``) and end-of-run reports; no-op
+        when telemetry is disabled, never on the per-tick path."""
+        tel = _telemetry.TELEMETRY
+        if tel is None:
+            return
+        for slot in self._slots:
+            if slot.result is not None:
+                _telemetry.sync_stream_stats(
+                    tel.registry, slot.result.stats, pending=0,
+                    tenant=slot.tenant.name,
+                )
+            else:
+                slot.session.sync_telemetry()
+        tel.registry.gauge("odl_mux_tenants", len(self._slots))
+
     def extract(self, name: str, quiesce_ticks: int = 4096):
         """Live-migrate a tenant out: snapshot the session and remove it
         from this scheduler.
@@ -641,6 +671,8 @@ class Multiplexer:
         through a ``CheckpointManager`` and reopen a seekable source at
         ``snapshot.ticks_consumed(tree)`` (another process).
         """
+        tel = _telemetry.TELEMETRY
+        tok = tel.tracer.begin("migrate.extract") if tel is not None else None
         slot = self._slot(name)
         if slot.result is not None:
             raise ValueError(f"tenant {name!r} already finished; nothing to migrate")
@@ -671,6 +703,9 @@ class Multiplexer:
         if slot in self._live:
             self._live.remove(slot)
         self.agg.n_tenants = len(self._slots)
+        if tok is not None:
+            tel.tracer.end(tok, tenant=name, t=slot.session.t)
+            tel.registry.count("odl_mux_extracts")
         return tree, slot.it
 
     # -- scheduling --------------------------------------------------------
@@ -725,6 +760,13 @@ class Multiplexer:
                     self._live.remove(s)
                 self._live.insert(idx, unit)
                 self._cohorts[key] = unit
+                tel = _telemetry.TELEMETRY
+                if tel is not None:
+                    tel.tracer.event(
+                        "cohort.pack", members=len(slots), s=unit.s,
+                        tenants=",".join(s.tenant.name for s in slots),
+                    )
+                    tel.registry.count("odl_mux_cohorts_packed")
 
     def _step_unit(self, u, n_ticks: int) -> list:
         """Step one scheduler unit; returns the units live after it (the
@@ -740,6 +782,10 @@ class Multiplexer:
                 self._cohorts = {
                     k: un for k, un in self._cohorts.items() if un is not u
                 }
+                tel = _telemetry.TELEMETRY
+                if tel is not None:
+                    tel.tracer.event("cohort.dissolve", released=len(released))
+                    tel.registry.count("odl_mux_cohorts_dissolved")
             for r in released:
                 r.deficit = 0.0
                 if r.draining and not self.drain:
@@ -758,6 +804,7 @@ class Multiplexer:
         self.agg.rounds += 1
         if self.fuse:
             self._form_cohorts()
+        units = list(self._live)  # pre-round units, for debit metering below
         if self.sched == "drr":
             # Credit is sized by the smallest *ticking* tenant: a tenant
             # that is only draining costs no device time and must not gate
@@ -783,6 +830,18 @@ class Multiplexer:
             for u in self._live:
                 nxt.extend(self._step_unit(u, self.quantum))
             self._live = nxt
+        tel = _telemetry.TELEMETRY
+        if tel is not None:
+            # Scheduler-level meters: rounds, and the stream-step debits
+            # this round actually charged (ticks × per-unit cost S — the
+            # DRR deficit currency; for rr the same product measures the
+            # round's device work).
+            tel.registry.count("odl_mux_rounds")
+            tel.registry.count(
+                "odl_mux_quantum_debits",
+                sum(u.last_ticks * u.s for u in units),
+            )
+            tel.registry.gauge("odl_mux_live_units", len(self._live))
         return bool(self._live)
 
     def run(self) -> tuple[dict[str, TenantResult], MultiplexStats]:

@@ -108,6 +108,7 @@ from typing import Optional
 import numpy as np
 
 from repro.engine.stream import TeacherReply
+from repro.runtime import telemetry as _telemetry
 
 # First byte of every v2 frame.  0x02 (STX) can never start a JSON line,
 # so the two wire formats coexist on one connection.
@@ -388,6 +389,32 @@ class LabelServer:
         with self._tlock:
             return sum(t.is_alive() for t in self._threads)
 
+    def stats(self) -> dict:
+        """Every public counter as one JSON-able dict — the payload a wire
+        ``stats`` request returns (see ``server_stats``).  The server
+        usually runs as a separate process, so this wire scrape is the
+        only way a client-side report can see these numbers."""
+        with self._tlock:
+            out = {
+                "auth_failures": self.auth_failures,
+                "requests_v1": self.requests_v1,
+                "frames_v2": self.frames_v2,
+                "asks_served": self.asks_served,
+                "frame_errors": self.frame_errors,
+                "frames_compressed": self.frames_compressed,
+                "compressed_bytes_in": self.compressed_bytes_in,
+                "raw_bytes_in": self.raw_bytes_in,
+                "compressed_bytes_out": self.compressed_bytes_out,
+                "raw_bytes_out": self.raw_bytes_out,
+                "connections_accepted": self._accepted,
+            }
+        out["thread_count"] = self.thread_count()
+        out["n_out"] = self.n_out
+        out["delay_s"] = self.delay_s
+        out["jitter_s"] = self.jitter_s
+        out["loss_prob"] = self.loss_prob
+        return out
+
     def close(self) -> None:
         """Stop accepting, unblock and join every client thread."""
         self._stop.set()
@@ -433,6 +460,19 @@ class LabelServer:
         try:
             for kind, obj, payload in _iter_wire(f):
                 if kind == "v2":
+                    if isinstance(obj, dict) and obj.get("kind") == "stats":
+                        # Live counter scrape: answered immediately (no
+                        # fault-model sleep — operators scrape a server
+                        # that is deliberately simulating slow labels).
+                        reply = _encode_frame(
+                            {"kind": "stats", "payload_len": 0,
+                             "stats": self.stats()}, b"")
+                        try:
+                            f.write(reply)
+                            f.flush()
+                        except OSError:
+                            return
+                        continue
                     if not isinstance(obj, dict) or obj.get("kind") != "ask":
                         continue
                     z = obj.pop("_z", None)
@@ -725,6 +765,7 @@ class RpcTeacher:
                 "carry v2 frames; v1 newline-JSON has no framing to wrap)")
         self.timeout_s = timeout_s
         self.wire = wire
+        self._endpoint = f"{host}:{int(port)}"  # telemetry label only
         # Authentication (when configured) happens inside the connection
         # constructor, synchronously, before the reader thread owns the
         # socket.
@@ -755,6 +796,19 @@ class RpcTeacher:
     @property
     def wire_bytes(self) -> int:
         return self._conn.bytes
+
+    def sync_telemetry(self, **labels) -> None:
+        """Mirror wire meters into the enabled telemetry registry (see
+        ``BatchedRpcClient.sync_telemetry``); no-op when telemetry is off."""
+        tel = _telemetry.TELEMETRY
+        if tel is None:
+            return
+        labels.setdefault("endpoint", self._endpoint)
+        reg = tel.registry
+        reg.set_counter("odl_rpc_wire_messages", self.wire_messages, **labels)
+        reg.set_counter("odl_rpc_wire_bytes", self.wire_bytes, **labels)
+        with self._lock:
+            reg.set_counter("odl_rpc_timed_out", self.timed_out, **labels)
 
     def _on_replies(self, replies: list[TeacherReply], arrived: float) -> None:
         with self._lock:
@@ -948,6 +1002,24 @@ class BatchedRpcClient:
     def wire_bytes(self) -> int:
         return self._conn.bytes
 
+    def sync_telemetry(self, **labels) -> None:
+        """Mirror this connection's wire meters into the enabled telemetry
+        registry (absolute writes, same pull-based discipline as
+        ``StreamSession.sync_telemetry``); no-op when telemetry is off."""
+        tel = _telemetry.TELEMETRY
+        if tel is None:
+            return
+        labels.setdefault("endpoint", f"{self._host}:{self._port}")
+        reg = tel.registry
+        reg.set_counter("odl_rpc_wire_messages", self.wire_messages, **labels)
+        reg.set_counter("odl_rpc_wire_bytes", self.wire_bytes, **labels)
+        with self._cond:
+            reg.set_counter("odl_rpc_asks_sent", self.asks_sent, **labels)
+            reg.set_counter("odl_rpc_timed_out", self.timed_out, **labels)
+            reg.set_counter("odl_rpc_reconnects", self.reconnects, **labels)
+            reg.set_counter("odl_rpc_asks_reasked", self.asks_reasked,
+                            **labels)
+
     def tenant(self, name: Optional[str] = None) -> BatchedRpcTeacher:
         """A new per-tenant ``stream.Teacher`` handle on this connection."""
         handle = BatchedRpcTeacher(self, name=name)
@@ -1028,9 +1100,15 @@ class BatchedRpcClient:
             # stay pending until their deadlines, then map to loss.
             self._reconnect_and_reask()
             return
-        if self._conn.send(self._frame(batch)):
+        tel = _telemetry.TELEMETRY
+        tok = tel.tracer.begin("rpc.flush") if tel is not None else None
+        sent = self._conn.send(self._frame(batch))
+        if sent:
             with self._cond:
                 self.asks_sent += len(batch)
+        if tok is not None:
+            tel.tracer.end(tok, asks=len(batch), sent=sent)
+            tel.registry.observe("odl_rpc_batch_occupancy", len(batch))
 
     def _frame(self, batch) -> bytes:
         data = encode_asks(batch)
@@ -1062,6 +1140,10 @@ class BatchedRpcClient:
                 daemon=True,
             ).start()
             old.close()
+            tel = _telemetry.TELEMETRY
+            if tel is not None:
+                tel.tracer.event("rpc.reconnect",
+                                 endpoint=f"{self._host}:{self._port}")
             with self._cond:
                 self.reconnects += 1
                 # A later poisoning earns its own single attempt.
@@ -1122,6 +1204,35 @@ class BatchedRpcClient:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+def server_stats(host: str, port: int, secret: Optional[str] = None,
+                 timeout_s: float = 5.0) -> dict:
+    """Scrape a running ``LabelServer``'s counters over the wire.
+
+    Dials a fresh connection, performs the HMAC handshake when a secret is
+    configured, sends one v2 ``{"kind": "stats"}`` frame, and returns the
+    server's counter dict (see ``LabelServer.stats``).  The label server
+    usually lives in another process, so this is the only way a client-side
+    report can include its numbers.
+    """
+    sock = socket.create_connection((host, port), timeout=timeout_s)
+    try:
+        wfile = sock.makefile("wb")
+        if secret is not None:
+            _authenticate(sock, wfile, secret)
+        wfile.write(_encode_frame({"kind": "stats", "payload_len": 0}, b""))
+        wfile.flush()
+        with sock.makefile("rb") as rf:
+            for kind, obj, _payload in _iter_wire(rf):
+                if (kind == "v2" and isinstance(obj, dict)
+                        and obj.get("kind") == "stats"):
+                    return dict(obj.get("stats") or {})
+    finally:
+        _shutdown_socket(sock)
+    raise ConnectionError(
+        "label server closed the connection without answering the stats "
+        "request (pre-stats server version?)")
 
 
 # ---------------------------------------------------------------------------

@@ -63,6 +63,7 @@ from repro.core import labels as labels_mod
 from repro.core import oselm, pruning
 from repro.engine import fleet, stream
 from repro.engine.types import EngineConfig, EngineState
+from repro.runtime import telemetry as _telemetry
 
 SNAPSHOT_VERSION = 1
 
@@ -239,9 +240,17 @@ def capture(sess: "stream.StreamSession") -> dict:
     device→host syncs of the state and any in-flight plan context).  Wall
     time elapsed so far is folded into the captured ``wall_s`` so resumed
     stats keep accumulating from the right total.
+
+    Load signals travel too: ``tick_rate_ema`` and ``ring_occupancy_hwm``
+    ride the meta ``stats`` dict like every other scalar, so a migrated
+    tenant lands on its new worker with its wall-clock history intact.
+    Telemetry trace rings (``runtime/telemetry.py``) deliberately do NOT —
+    they are process-local observability, not session state.
     """
     if sess._finished:
         raise RuntimeError("cannot snapshot a finished session")
+    tel = _telemetry.TELEMETRY
+    tok = tel.tracer.begin("snapshot.save") if tel is not None else None
     stats = sess.stats
     wall_s = stats.wall_s
     if sess._t_start is not None:
@@ -297,6 +306,9 @@ def capture(sess: "stream.StreamSession") -> dict:
             k: np.stack(v) for k, v in sess._cols.items()
         }
         tree["collected"]["trained"] = np.stack(sess._trained_rows)
+    if tok is not None:
+        tel.tracer.end(tok, t=sess.t, ring=len(tree["ring"]),
+                       **sess.telemetry_labels)
     return tree
 
 
@@ -340,6 +352,8 @@ def restore(
         raise ValueError(
             f"snapshot version {meta['version']} != supported {SNAPSHOT_VERSION}"
         )
+    tel = _telemetry.TELEMETRY
+    tok = tel.tracer.begin("snapshot.restore") if tel is not None else None
     if cfg is None:
         cfg = config_from_dict(meta["cfg"])
     sess = stream.StreamSession(
@@ -419,6 +433,8 @@ def restore(
         for k in sess._cols:
             sess._cols[k] = [np.array(row) for row in np.asarray(col[k])]
         sess._trained_rows = [np.array(row) for row in np.asarray(col["trained"])]
+    if tok is not None:
+        tel.tracer.end(tok, t=sess.t, ring=len(entries), pending=pending)
     return sess
 
 

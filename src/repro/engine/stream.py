@@ -84,6 +84,7 @@ import numpy as np
 from repro.distributed import sharding
 from repro.engine import fleet
 from repro.engine.types import EngineConfig, EngineState, FleetStepOutput
+from repro.runtime import telemetry as _telemetry
 
 # Safety bound on drain polling — a broken Teacher that reports in-flight
 # tickets forever must not hang the runtime (serve.py uses it too).
@@ -389,7 +390,12 @@ class StreamStats:
     # EMA of the tick rate (ticks/s — NOT deterministic, excluded from
     # parity comparisons) and the pending ring's high-water occupancy (a
     # teacher that can't keep up shows here before queries start dropping).
-    # Both travel in snapshots so a migrated tenant keeps its history.
+    # Both travel in snapshots (engine/snapshot.py meta "stats") so a
+    # migrated tenant keeps its wall-clock history — while the process-local
+    # telemetry trace ring (runtime/telemetry.py) intentionally does NOT:
+    # spans recorded on the source worker stay on the source, and parity
+    # tests exclude both the EMA and the tracer accordingly
+    # (tests/test_telemetry.py locks these restore semantics).
     tick_rate_ema: float = 0.0
     ring_occupancy_hwm: int = 0
     tick_ms: "collections.deque" = dataclasses.field(
@@ -669,6 +675,11 @@ class StreamSession:
         self.t = 0
         self._t_start: Optional[float] = None
         self._finished = False
+        # Telemetry label set for this session's registry series / spans
+        # ({tenant, worker, shard, ...}); owners (multiplexer, sharded
+        # session, worker) fill it in.  Purely observational — never read
+        # on the compute path.
+        self.telemetry_labels: dict = {}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -701,6 +712,8 @@ class StreamSession:
         assert p is not None, "advance() before start()"
         t = self.t
         t0 = time.perf_counter()
+        tel = _telemetry.TELEMETRY
+        tok = tel.tracer.begin("stream.tick") if tel is not None else None
         if nxt is not None:
             nxt = self.ship(nxt)
         queried_host = np.asarray(p.queried)  # host syncs on tick t here
@@ -762,6 +775,8 @@ class StreamSession:
             )
         self.t += 1
         self._x, self._p = nxt, p_next
+        if tok is not None:
+            tel.tracer.end(tok, t=t, queries=n_q, **self.telemetry_labels)
 
     def drain_replies(
         self,
@@ -823,6 +838,28 @@ class StreamSession:
             self.t = t0
         return not len(self.ring)
 
+    def pending_queries(self) -> int:
+        """Stream-queries issued but not yet settled: asked tickets still
+        in the ring plus ``block``-deferred asks.  With it the accounting
+        identity closes at *any* instant — ``queries_issued ==
+        labels_applied + queries_dropped + queries_lost +
+        queries_coalesced + pending_queries()`` — which is what makes a
+        live mid-run scrape (runtime/worker.py ``metrics``) checkable."""
+        n = sum(int(ent.queried.sum()) for ent in self.ring.entries())
+        n += sum(int(d.queried.sum()) for d in self._deferred)
+        return n
+
+    def sync_telemetry(self) -> None:
+        """Mirror this session's ``StreamStats`` into the enabled registry
+        (no-op when telemetry is disabled).  Called at ``finish()`` and by
+        live scrapes; never on the per-tick path."""
+        tel = _telemetry.TELEMETRY
+        if tel is not None:
+            _telemetry.sync_stream_stats(
+                tel.registry, self.stats, pending=self.pending_queries(),
+                **self.telemetry_labels
+            )
+
     def _poll_and_apply(self) -> list[TeacherReply]:
         replies = self.teacher.poll(self.t)
         for reply in replies:
@@ -852,6 +889,7 @@ class StreamSession:
         self._deferred.clear()
         if self._t_start is not None:
             self.stats.wall_s += time.perf_counter() - self._t_start
+        self.sync_telemetry()
         outs = None
         if self.collect and self._cols["pred"]:
             outs = FleetStepOutput(
@@ -912,6 +950,12 @@ class StreamSession:
         if dropped is not None:
             self.stats.tickets_dropped += 1
             self.stats.queries_dropped += int(dropped.queried.sum())
+            tel = _telemetry.TELEMETRY
+            if tel is not None:
+                tel.tracer.event(
+                    "ring.evict", t=t, evicted_tick=dropped.tick,
+                    queries=int(dropped.queried.sum()), **self.telemetry_labels
+                )
 
     def _submit(self, x, queried: np.ndarray, p, t: int) -> None:
         """Route one tick's decided queries through the backpressure policy."""
@@ -1185,6 +1229,7 @@ class ShardedStreamSession:
                     live=live,
                 )
             )
+            self.sessions[-1].telemetry_labels = {"shard": str(k)}
         self._zeros = None  # shared immutable tick slice for fully-dead shards
 
     def _shard_tick(self, x: np.ndarray, k: int):

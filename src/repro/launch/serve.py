@@ -77,6 +77,7 @@ import numpy as np
 from repro import configs, engine
 from repro.engine import multiplex, rpc, snapshot, stream
 from repro.models import model as model_lib
+from repro.runtime import telemetry
 
 
 def _decode_feats(params, state, prompts, cfg, gen_tokens):
@@ -90,11 +91,80 @@ def _decode_feats(params, state, prompts, cfg, gen_tokens):
         yield feats
 
 
+def _print_stream_report(parsed: dict) -> dict:
+    """ONE render for every serve path's per-session counter block.
+
+    ``parsed`` is a ``telemetry.parse_prometheus`` view — the same shape
+    whether it came from this process's registry (solo / mesh) or a
+    worker scrape (fleet) — so the three reports cannot drift apart.
+    Prints one line per label set carrying stream counters and returns
+    the summed counters plus ``identity_ok`` / ``sessions``.
+    """
+    ident = telemetry.check_stream_identity(parsed)
+    fields = ("queries_issued", "stream_steps", "labels_applied",
+              "queries_dropped", "queries_lost", "queries_coalesced",
+              "replies_orphaned", "tickets_reasked")
+    totals = dict.fromkeys(fields, 0)
+    for key in sorted(ident):
+        def g(f, key=key):
+            return int(parsed.get((f"odl_stream_{f}", key), 0))
+        who = ",".join(
+            f"{k}{v}" if k in ("shard", "cohort") else v for k, v in key
+        ) or "session"
+        recon = "ok" if ident[key] else "BROKEN"
+        issued, steps = g("queries_issued"), g("stream_steps")
+        print(f"{who}: queries {issued}/{steps} "
+              f"({100 * issued / max(steps, 1):.1f}% comm volume), "
+              f"labels {g('labels_applied')}, dropped {g('queries_dropped')}, "
+              f"lost {g('queries_lost')}, coalesced {g('queries_coalesced')}, "
+              f"orphaned {g('replies_orphaned')}, "
+              f"reasked {g('tickets_reasked')}, accounting {recon}")
+        for f in fields:
+            totals[f] += g(f)
+    totals["identity_ok"] = bool(ident) and all(ident.values())
+    totals["sessions"] = len(ident)
+    return totals
+
+
+def _print_label_server_stats(ls: dict) -> None:
+    """The label server's own counters, scraped over the wire
+    (``rpc.server_stats``) — the server runs as a subprocess, so this is
+    the only way the final report can include its side of the ledger."""
+    comp = ""
+    if ls.get("frames_compressed"):
+        win_in = ls["raw_bytes_in"] / max(ls["compressed_bytes_in"], 1)
+        win_out = ls["raw_bytes_out"] / max(ls["compressed_bytes_out"], 1)
+        comp = (f", compression x{win_in:.1f} in / x{win_out:.1f} out over "
+                f"{ls['frames_compressed']} frames")
+    print(f"label server: {ls['asks_served']} asks "
+          f"({ls['frames_v2']} v2 frames, {ls['requests_v1']} v1 requests), "
+          f"frame errors {ls['frame_errors']}, auth failures "
+          f"{ls['auth_failures']}, {ls['connections_accepted']} "
+          f"connection(s), {ls['thread_count']} live thread(s){comp}")
+
+
+def _write_metrics_json(path: str, doc: dict, traces: dict = None) -> None:
+    """``--metrics-json``: machine-readable run metrics, plus one Chrome
+    ``trace_event`` file per traced process (load it in chrome://tracing
+    or https://ui.perfetto.dev)."""
+    import json as json_mod
+
+    with open(path, "w") as f:
+        json_mod.dump(doc, f, indent=2, sort_keys=True, default=str)
+    written = [path]
+    for tag, trace in (traces or {}).items():
+        tpath = f"{path}.{tag}.trace.json" if tag else f"{path}.trace.json"
+        with open(tpath, "w") as f:
+            json_mod.dump(trace, f)
+        written.append(tpath)
+    print(f"metrics written: {', '.join(written)}")
+
+
 def _serve_mesh(cfg, odl_cfg, params, state, prompts, *, mesh_fleet, batch,
                 gen_tokens, seed, teacher, teacher_latency, teacher_jitter,
                 teacher_loss, pending_capacity, backpressure, rpc_timeout_s,
                 teacher_batch_window_s, teacher_batch_max, teacher_secret,
-                teacher_compress):
+                teacher_compress, metrics_json=None):
     """Mega-fleet path: one tenant, its stream axis sharded over a
     ``("fleet",)`` mesh — one shard-local session (pending ring, teacher
     connection, plan/learn dispatch) per device, a label learning back
@@ -142,20 +212,25 @@ def _serve_mesh(cfg, odl_cfg, params, state, prompts, *, mesh_fleet, batch,
                 backpressure=backpressure, collect=False,
             )
         rpc_bytes = client.wire_bytes if teacher == "rpc" else None
+        label_server_stats = None
+        if teacher == "rpc":
+            client.sync_telemetry()
+            label_server_stats = rpc.server_stats(host, port,
+                                                  secret=teacher_secret)
 
-    queries = skips = 0
+    tel = telemetry.get() or telemetry.enable()
     for k, s in enumerate(stats_list):
-        recon = "ok" if s.reconciled else "BROKEN"
-        queries += s.queries_issued
-        skips += s.stream_steps - s.queries_issued
-        print(f"shard{k}: queries {s.queries_issued}/{s.stream_steps} "
-              f"({100 * s.queries_issued / max(s.stream_steps, 1):.1f}% comm "
-              f"volume), labels {s.labels_applied}, dropped "
-              f"{s.queries_dropped}, lost {s.queries_lost}, coalesced "
-              f"{s.queries_coalesced}, accounting {recon}")
-        if not s.reconciled:
-            raise AssertionError(f"shard{k}: query accounting does not "
-                                 f"reconcile: {s.summary()}")
+        telemetry.sync_stream_stats(tel.registry, s, pending=0, shard=str(k))
+    report = _print_stream_report(
+        telemetry.parse_prometheus(tel.registry.prometheus_text()))
+    queries = report["queries_issued"]
+    skips = report["stream_steps"] - report["queries_issued"]
+    if not report["identity_ok"]:
+        raise AssertionError(
+            "shard query accounting does not reconcile: "
+            + "; ".join(s.summary() for s in stats_list))
+    if label_server_stats is not None:
+        _print_label_server_stats(label_server_stats)
     agg = stream.aggregate_stats(
         stats_list, padded_streams=(-batch) % max(n_shards, 1))
     meter_kb = float(np.asarray(st.meter.total).sum()) / 1e3
@@ -166,6 +241,14 @@ def _serve_mesh(cfg, odl_cfg, params, state, prompts, *, mesh_fleet, batch,
           f"padded {agg['padded_streams']} dead rows; "
           f"backpressure={backpressure}, teacher={teacher}"
           f"{rpc_note}; {meter_kb:.1f} kB metered")
+    if metrics_json:
+        _write_metrics_json(metrics_json, {
+            "mode": "mesh", "shards": n_shards, "tokens": gen_tokens,
+            "report": report, "aggregate": agg,
+            "prometheus": tel.registry.prometheus_text(),
+            "registry": tel.registry.snapshot(),
+            "label_server": label_server_stats,
+        }, {"": tel.tracer.chrome_trace()})
     return queries, skips
 
 
@@ -176,7 +259,8 @@ def serve_fleet(workers: int = 2, tenants: int = 4, batch: int = 4,
                 teacher_jitter: int = 1, teacher_loss: float = 0.0,
                 pending_capacity: int = 8, backpressure: str = "drop_oldest",
                 worker_capacity: int = None, migrate: bool = True,
-                drain: bool = True, snapshot_full_every: int = 8):
+                drain: bool = True, snapshot_full_every: int = 8,
+                metrics_json: str = None):
     """Elastic fleet path (``--workers N``): spin ``workers`` multiplexer
     worker subprocesses behind a shape-aware router
     (``repro.runtime.elastic``), admit ``tenants`` tenants by
@@ -215,6 +299,11 @@ def serve_fleet(workers: int = 2, tenants: int = 4, batch: int = 4,
         # instead of all packing onto the first worker.
         worker_capacity = max(1, -(-tenants // workers))
 
+    # Router-side telemetry: migrate.ship spans land in THIS process's
+    # trace; each worker keeps its own registry, scraped over the control
+    # socket (router.fleet_metrics).
+    tel = telemetry.enable()
+    tel.registry.clear()
     fleet = [elastic.spawn_worker(f"w{i}") for i in range(workers)]
     router = elastic.Router(fleet, capacity=worker_capacity)
     collected: dict = {}
@@ -256,6 +345,22 @@ def serve_fleet(workers: int = 2, tenants: int = 4, batch: int = 4,
                     break
                 time_mod.sleep(0.02)
 
+        # Mid-run live scrape: every worker's registry over the control
+        # socket, while tenants still stream.  The scraped identity
+        # (issued == applied + dropped + lost + coalesced + pending) must
+        # close at this instant — the CI observability smoke rides this.
+        scrape = router.fleet_metrics()
+        midrun = {}
+        for wname, h in scrape["workers"].items():
+            midrun.update(telemetry.check_stream_identity(
+                telemetry.parse_prometheus(h["prometheus"])))
+        print(f"mid-run scrape: {len(midrun)} tenant series across "
+              f"{len(scrape['workers'])} worker(s), identity "
+              f"{'ok' if midrun and all(midrun.values()) else 'BROKEN'}")
+        if not midrun or not all(midrun.values()):
+            raise AssertionError(
+                f"mid-run scraped query accounting broken: {midrun}")
+
         if drain and len(router.workers) > 1:
             victim = router.workers[-1]
             moved, finished = router.scale_in(victim)
@@ -266,21 +371,19 @@ def serve_fleet(workers: int = 2, tenants: int = 4, batch: int = 4,
 
         router.wait_finished([s["name"] for s in specs], timeout_s=600)
 
-        # Per-worker reports, then the fleet aggregate.
+        # Final scrape (with traces when they'll be written) BEFORE the
+        # workers go away, then ONE render over the collected stats — the
+        # same `_print_stream_report` the solo and mesh paths use, fed
+        # through a registry so the fleet report cannot drift from them.
+        final_scrape = router.fleet_metrics(trace=bool(metrics_json))
         for w in router.workers:
-            report = w.report()
-            collected.update(report)
-            for name in sorted(report):
-                s = report[name]
-                recon = "ok" if s.get("reconciled") else "BROKEN"
-                print(f"{w.name}/{name}: queries {s['queries_issued']}"
-                      f"/{s['stream_steps']} "
-                      f"({100 * s['queries_issued'] / max(s['stream_steps'], 1):.1f}% "
-                      f"comm volume), labels {s['labels_applied']}, "
-                      f"dropped {s['queries_dropped']}, "
-                      f"lost {s['queries_lost']}, "
-                      f"coalesced {s['queries_coalesced']}, "
-                      f"reasked {s['tickets_reasked']}, accounting {recon}")
+            collected.update(w.report())
+        reg = telemetry.Registry()
+        for name, s in collected.items():
+            telemetry.sync_stream_stats(
+                reg, worker_mod.stats_from_wire(s), pending=0, tenant=name)
+        report = _print_stream_report(
+            telemetry.parse_prometheus(reg.prometheus_text()))
         agg = elastic.reconcile(collected)
         recon = "ok" if agg["reconciled"] else "BROKEN"
         print(f"fleet aggregate: {len(collected)} tenant(s) over "
@@ -293,6 +396,21 @@ def serve_fleet(workers: int = 2, tenants: int = 4, batch: int = 4,
         if not agg["reconciled"] or not all(agg["per_tenant"].values()):
             raise AssertionError(
                 f"fleet query accounting does not reconcile: {agg}")
+        if not report["identity_ok"]:
+            raise AssertionError(
+                "scraped metrics identity does not hold at end of run")
+        if metrics_json:
+            traces = dict(final_scrape["traces"])
+            traces["router"] = tel.tracer.chrome_trace()
+            _write_metrics_json(metrics_json, {
+                "mode": "fleet", "workers_spawned": workers,
+                "workers": final_scrape["workers"],
+                "report": report,
+                "aggregate": {k: v for k, v in agg.items()
+                              if k != "per_tenant"},
+                "per_tenant_reconciled": agg["per_tenant"],
+                "midrun_series": len(midrun),
+            }, traces)
         return agg["queries_issued"], agg["stream_steps"] - agg["queries_issued"]
     finally:
         router.close()
@@ -310,7 +428,13 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
           snapshot_dir: str = None, snapshot_every: int = 0,
           resume: bool = False, migrate: bool = False,
           fuse_cohorts: bool = True, teacher_compress: bool = False,
-          mesh_fleet: int = 0):
+          mesh_fleet: int = 0, metrics_json: str = None):
+    # Driver-level telemetry: spans + mirrored counters for this process.
+    # The stream bench gates the instrumented overhead at <2%, so it is
+    # on by default here.  Cleared per run — serve() may be called twice
+    # in one process (tests) and stale tenant series must not leak.
+    tel = telemetry.enable()
+    tel.registry.clear()
     cfg = configs.get_config(arch, variant)
     key = jax.random.PRNGKey(seed)
     params = model_lib.layers.init_params(model_lib.build_schema(cfg), key)
@@ -341,6 +465,7 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
             teacher_batch_window_s=teacher_batch_window_s,
             teacher_batch_max=teacher_batch_max,
             teacher_secret=teacher_secret, teacher_compress=teacher_compress,
+            metrics_json=metrics_json,
         )
     durable = snapshot_dir is not None
     # One backbone decode feeds every tenant: tee the tick source N ways
@@ -485,31 +610,44 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
         else:
             results, agg = mux.run()
 
-    queries = skips = 0
-    for name in sorted(results):
+        # Pull every meter into the registry while the teachers are still
+        # alive, and scrape the label server's own counters over the wire
+        # (it is a subprocess — this is the only way to see them).
+        mux.sync_telemetry()
+        if migrate:
+            mux_b.sync_telemetry()
+        label_server_stats = None
+        if teacher == "rpc":
+            for client in rpc_clients:
+                client.sync_telemetry()
+            label_server_stats = rpc.server_stats(host, port,
+                                                  secret=teacher_secret)
+
+    # ONE render over the registry view — shared with the mesh and fleet
+    # paths, so the per-tenant counter block cannot drift between them.
+    report = _print_stream_report(
+        telemetry.parse_prometheus(tel.registry.prometheus_text()))
+    queries = report["queries_issued"]
+    skips = report["stream_steps"] - report["queries_issued"]
+    for name in sorted(results):  # details the registry doesn't carry
         r = results[name]
         s = r.stats
-        t_skips = s.stream_steps - s.queries_issued
-        queries += s.queries_issued
-        skips += t_skips
         meter_kb = float(np.asarray(r.state.meter.total).sum()) / 1e3
-        recon = "ok" if s.reconciled else "BROKEN"
-        print(f"{name}: queries {s.queries_issued}/{s.stream_steps} "
-              f"({100 * s.queries_issued / max(s.stream_steps, 1):.1f}% comm volume), "
-              f"labels {s.labels_applied}, dropped {s.queries_dropped}, "
-              f"lost {s.queries_lost}, coalesced {s.queries_coalesced}, "
-              f"orphaned {s.replies_orphaned}, reasked {s.tickets_reasked}, "
-              f"accounting {recon}, {meter_kb:.1f} kB metered")
         rpc_note = (
             f"; rpc timeouts {teachers[name].timed_out}"
             if teacher == "rpc" else ""
         )
-        print(f"  tick p50/p95 {s.tick_p50_ms:.2f}/{s.tick_p95_ms:.2f} ms; "
-              f"label latency p50/p95 {s.label_latency_p50:.0f}/"
-              f"{s.label_latency_p95:.0f} ticks{rpc_note}")
+        print(f"  {name}: tick p50/p95 {s.tick_p50_ms:.2f}/{s.tick_p95_ms:.2f}"
+              f" ms; label latency p50/p95 {s.label_latency_p50:.0f}/"
+              f"{s.label_latency_p95:.0f} ticks; "
+              f"{meter_kb:.1f} kB metered{rpc_note}")
         if not s.reconciled:
             raise AssertionError(f"{name}: query accounting does not reconcile: "
                                  f"{s.summary()}")
+    if not report["identity_ok"]:
+        raise AssertionError("scraped metrics identity does not hold")
+    if label_server_stats is not None:
+        _print_label_server_stats(label_server_stats)
     caches = stream.cache_stats()["plan_runner"]
     extras = f", sched={sched}"
     if durable:
@@ -520,6 +658,17 @@ def serve(arch: str, variant: str = "smoke", batch: int = 4, prompt_len: int = 1
           f"teacher={teacher}{extras}; plan-runner cache "
           f"{caches['hits']} hits / {caches['misses']} misses "
           f"(tenants share executables)")
+    if metrics_json:
+        _write_metrics_json(metrics_json, {
+            "mode": "solo", "tenants": tenants, "tokens": gen_tokens,
+            "report": report,
+            "aggregate": {"stream_steps": agg.stream_steps,
+                          "wall_s": agg.wall_s,
+                          "steps_per_s": agg.steps_per_s},
+            "prometheus": tel.registry.prometheus_text(),
+            "registry": tel.registry.snapshot(),
+            "label_server": label_server_stats,
+        }, {"": tel.tracer.chrome_trace()})
     return queries, skips
 
 
@@ -608,6 +757,10 @@ def main(argv=None):
     ap.add_argument("--snapshot-full-every", type=int, default=8,
                     help="worker cadence saves ship only changed leaves; "
                     "every k-th save is full (1: all saves full)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write run metrics (registry snapshot + Prometheus "
+                    "text + per-tenant report) to PATH, plus Chrome "
+                    "trace_event files PATH.<tag>.trace.json")
     args = ap.parse_args(argv)
     if args.workers:
         return serve_fleet(
@@ -623,7 +776,8 @@ def main(argv=None):
             worker_capacity=args.worker_capacity,
             migrate=not args.no_fleet_migrate,
             drain=not args.no_fleet_drain,
-            snapshot_full_every=args.snapshot_full_every)
+            snapshot_full_every=args.snapshot_full_every,
+            metrics_json=args.metrics_json)
     serve(args.arch, args.variant, batch=args.batch, gen_tokens=args.tokens,
           teacher_latency=args.teacher_latency, teacher_jitter=args.teacher_jitter,
           teacher_loss=args.teacher_loss, pending_capacity=args.pending_capacity,
@@ -636,7 +790,7 @@ def main(argv=None):
           resume=args.resume, migrate=args.migrate,
           fuse_cohorts=args.fuse_cohorts == "on",
           teacher_compress=args.teacher_compress,
-          mesh_fleet=args.mesh_fleet)
+          mesh_fleet=args.mesh_fleet, metrics_json=args.metrics_json)
 
 
 if __name__ == "__main__":

@@ -44,6 +44,7 @@ import time
 from typing import Optional
 
 from repro.engine import rpc, snapshot
+from repro.runtime import telemetry as _telemetry
 from repro.runtime import worker as worker_mod
 
 
@@ -116,6 +117,13 @@ class WorkerClient:
     def report(self) -> dict:
         """Stats dicts of every finished tenant, keyed by name."""
         return self._request({"kind": "report"})[0]["results"]
+
+    def metrics(self, trace: bool = False) -> tuple[dict, bytes]:
+        """Live telemetry scrape: the reply header carries the worker's
+        Prometheus exposition text (``"prometheus"``) and registry JSON
+        (``"metrics"``); with ``trace`` the payload is the worker's span
+        ring as Chrome ``trace_event`` JSON bytes."""
+        return self._request({"kind": "metrics", "trace": bool(trace)})
 
     def shutdown(self) -> None:
         with contextlib.suppress(WorkerError, OSError, EOFError, StopIteration):
@@ -252,10 +260,19 @@ class Router:
         """Move a live tenant to ``dst`` (default: best non-source worker).
         The tenant resumes bit-for-bit from its wire snapshot."""
         src = self.worker_of(name)
+        # Router-side span covers the whole ship (extract + place + admit);
+        # the workers' own traces carry the migrate.extract / migrate.admit
+        # halves.  No-op unless telemetry is enabled in *this* process.
+        tel = _telemetry.TELEMETRY
+        tok = tel.tracer.begin("migrate.ship") if tel is not None else None
         spec, wire = src.extract(name)
         if dst is None:
             dst = self.place(spec, exclude=(src,))
         dst.admit(spec, wire)
+        if tok is not None:
+            tel.tracer.end(tok, tenant=name, src=src.name, dst=dst.name,
+                           wire_bytes=len(wire))
+            tel.registry.count("odl_router_migrations")
         self._placement[name] = dst
         return dst
 
@@ -330,6 +347,26 @@ class Router:
                     f"tenants never finished: {sorted(remaining)}"
                 )
             time.sleep(poll_s)
+
+    def fleet_metrics(self, trace: bool = False) -> dict:
+        """One live scrape of the whole fleet.
+
+        Returns ``{"workers": {worker_name: metrics_header}, "traces":
+        {worker_name: chrome_trace_dict}}`` where each metrics header is
+        the worker's ``metrics`` reply (``"prometheus"`` exposition text +
+        ``"metrics"`` registry JSON).  Traces are only fetched (and only
+        present) when ``trace=True``.  Scraping is read-only — it never
+        perturbs tenant state, so it is safe mid-run at any cadence.
+        """
+        import json as _json
+
+        out: dict = {"workers": {}, "traces": {}}
+        for w in self.workers:
+            header, payload = w.metrics(trace=trace)
+            out["workers"][w.name] = header
+            if trace and payload:
+                out["traces"][w.name] = _json.loads(payload)
+        return out
 
     def fleet_results(self) -> dict:
         """Finished-tenant stats from every live worker, name → stats dict.

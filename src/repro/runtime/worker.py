@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.engine import fleet as fleet_mod
 from repro.engine import multiplex, snapshot, stream
+from repro.runtime import telemetry as _telemetry
 
 TICK_KINDS = ("synth", "decode")
 TEACHER_KINDS = ("latency", "rpc")
@@ -280,8 +281,13 @@ class Worker:
         snapshot_dir: Optional[str] = None,
         snapshot_every: int = 0,
         snapshot_full_every: int = 8,
+        telemetry: bool = True,
     ):
         self.name = name
+        if telemetry:
+            # Process-wide: every session/client in this worker records into
+            # the same registry; the ``metrics`` command scrapes it live.
+            _telemetry.enable()
         self.mux = multiplex.Multiplexer(
             [], quantum=quantum, sched=sched, fuse=fuse, pending=pending,
             snapshot_dir=snapshot_dir, snapshot_every=snapshot_every,
@@ -365,6 +371,8 @@ class Worker:
             with self._lock:
                 if cmd == "status":
                     return self._status(), b""
+                if cmd == "metrics":
+                    return self._metrics(bool(header.get("trace", False)))
                 if cmd == "admit":
                     return self._admit(header["spec"], payload), b""
                 if cmd == "extract":
@@ -394,6 +402,34 @@ class Worker:
             "live": self.mux.load_report(),
             "finished": sorted(self.mux.finished_results()),
         }
+
+    def _metrics(self, trace: bool) -> tuple[dict, bytes]:
+        """Live scrape: sync every meter into the registry, then export.
+
+        Returns both renderings in the header (Prometheus exposition text
+        + the registry's JSON snapshot); when ``trace`` is requested the
+        reply payload carries the span ring as Chrome ``trace_event`` JSON
+        (``chrome://tracing`` / Perfetto loads it directly).
+        """
+        tel = _telemetry.TELEMETRY
+        if tel is None:
+            return {"kind": "metrics_ok", "worker": self.name,
+                    "enabled": False, "prometheus": "", "metrics": {}}, b""
+        self.mux.sync_telemetry()
+        for (host, port), client in self._rpc_clients.items():
+            client.sync_telemetry(endpoint=f"{host}:{port}")
+        header = {
+            "kind": "metrics_ok",
+            "worker": self.name,
+            "enabled": True,
+            "prometheus": tel.registry.prometheus_text(),
+            "metrics": tel.registry.snapshot(),
+        }
+        payload = b""
+        if trace:
+            import json as _json
+            payload = _json.dumps(tel.tracer.chrome_trace()).encode()
+        return header, payload
 
     def _admit(self, spec: dict, payload: bytes) -> dict:
         tree = snapshot.decode_snapshot(payload) if payload else None
@@ -455,12 +491,16 @@ def main(argv=None) -> int:
     ap.add_argument("--snapshot-full-every", type=int, default=8,
                     help="cadence saves ship only changed leaves; every k-th "
                     "save is full (1: all saves full)")
+    ap.add_argument("--telemetry", default="on", choices=("on", "off"),
+                    help="process-local metrics registry + span tracer "
+                    "(scraped via the 'metrics' control command)")
     args = ap.parse_args(argv)
     worker = Worker(
         name=args.name, host=args.host, port=args.port, quantum=args.quantum,
         sched=args.sched, fuse=args.fuse_cohorts == "on", pending=args.pending,
         snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
         snapshot_full_every=args.snapshot_full_every,
+        telemetry=args.telemetry == "on",
     )
     print(f"PORT {worker.port}", flush=True)
     try:
