@@ -1,0 +1,11 @@
+"""odlint — repo-native static analysis for the ODL runtime.
+
+AST-based rules that turn the repo's cross-file invariants (lock
+discipline, donation safety, counter mirroring, wire-protocol
+exhaustiveness, sharding scope) into parse-time checks.  See
+``src/repro/analysis/README.md`` for the rule catalog and
+``tools/odlint`` / ``python -m repro.analysis.cli`` for the CLI.
+"""
+
+from .core import Finding, Module, Project, Rule, run_rules  # noqa: F401
+from .rules import ALL_RULES  # noqa: F401

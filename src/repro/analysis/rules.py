@@ -1,0 +1,1051 @@
+"""odlint rules: the repo's cross-file invariants as parse-time checks.
+
+Each rule is a ``core.Rule`` subclass with a stable ID, a one-line
+rationale naming the bug/PR that motivated it, and fixture-backed
+golden tests in ``tests/test_odlint.py``.  Rule catalog with full
+rationale: ``src/repro/analysis/README.md``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from .core import Finding, Module, Project, Rule, call_name, dotted, str_const
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+_LOCK_CTORS = {
+    "threading.Lock",
+    "threading.RLock",
+    "threading.Condition",
+    "lockdebug.make_lock",
+    "lockdebug.make_rlock",
+    "lockdebug.make_condition",
+    "make_lock",
+    "make_rlock",
+    "make_condition",
+}
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """'attr' when node is ``self.attr``, else None."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _iter_classes(tree: ast.Module) -> Iterable[ast.ClassDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            yield node
+
+
+def _iter_funcs(node: ast.AST) -> Iterable[ast.FunctionDef]:
+    for child in ast.walk(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield child
+
+
+def _assigned_self_attrs(stmt: ast.stmt) -> list:
+    """(attr, node) pairs for every self.<attr> write in one statement.
+
+    Covers ``self.a = ...``, ``self.a += ...``, ``self.a[k] = ...``,
+    ``del self.a[k]``, and tuple targets.  Method-call mutators
+    (``self.a.append(...)``) are deliberately untracked: too many false
+    positives on single-threaded helper containers.
+    """
+    out = []
+
+    def visit_target(t: ast.AST) -> None:
+        attr = _self_attr(t)
+        if attr is not None:
+            out.append((attr, t))
+            return
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                visit_target(el)
+        elif isinstance(t, ast.Subscript):
+            attr = _self_attr(t.value)
+            if attr is not None:
+                out.append((attr, t))
+        elif isinstance(t, ast.Starred):
+            visit_target(t.value)
+
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            visit_target(t)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        if stmt.target is not None:
+            visit_target(stmt.target)
+    elif isinstance(stmt, ast.Delete):
+        for t in stmt.targets:
+            visit_target(t)
+    return out
+
+
+def _with_held_locks(with_node: ast.With) -> list:
+    """Lock attrs acquired by ``with self.<lock>:`` items."""
+    held = []
+    for item in with_node.items:
+        ctx = item.context_expr
+        attr = _self_attr(ctx)
+        if attr is not None:
+            held.append(attr)
+            continue
+        # with self._cond: via a Condition is the same acquire; also
+        # accept self._lock.acquire-style helpers spelled as calls
+        if isinstance(ctx, ast.Call):
+            attr = _self_attr(ctx.func)
+            if attr is not None:
+                held.append(attr)
+    return held
+
+
+# ---------------------------------------------------------------------------
+# ODL001 — lock discipline
+# ---------------------------------------------------------------------------
+
+
+class LockDisciplineRule(Rule):
+    """Writes to guarded attributes of threaded classes must hold the lock.
+
+    A class is *threaded* when it owns a lock attribute (assigned from
+    ``threading.Lock/RLock/Condition()`` or ``lockdebug.make_*``) and
+    either spawns a ``threading.Thread`` or carries an explicit
+    ``guarded-by`` annotation.  An attribute is *guarded* when at least
+    one write outside ``__init__`` happens under ``with self.<lock>:``
+    (inference), or when any of its writes carries
+    ``# odlint: guarded-by(<lock>)``.  Every other write to that
+    attribute outside ``__init__`` must then hold the same lock, be
+    inside a method annotated ``# odlint: holds-lock(<lock>)``, or be
+    suppressed with a reason.
+    """
+
+    rule_id = "ODL001"
+    title = "unguarded write to a lock-protected attribute"
+    rationale = (
+        "PR 5 shipped unsynchronized socket writes that interleaved "
+        "partial frames; PR 10 found SpanTracer.dropped mutated outside "
+        "its lock"
+    )
+
+    def check_module(self, module: Module, project: Project):
+        for cls in _iter_classes(module.tree):
+            yield from self._check_class(module, cls)
+
+    def _check_class(self, module: Module, cls: ast.ClassDef):
+        lock_attrs = self._lock_attrs(cls)
+        if not lock_attrs:
+            return
+
+        # Gather every self-attr write with its context:
+        # (attr, node, held_locks, func)
+        writes = []
+        for func in self._methods(cls):
+            # the annotation may sit on the def line, anywhere in a
+            # multi-line signature, or standalone directly above the def
+            holds = {
+                a.lock
+                for a in module.annotation_in_range(
+                    func.lineno - 1,
+                    func.body[0].lineno if func.body else func.lineno,
+                    "holds-lock",
+                )
+            }
+            self._collect_writes(module, func, func.body, set(holds), writes)
+
+        # Explicit guarded-by annotations on write lines
+        guarded: dict[str, set] = {}
+        for attr, node, held, func in writes:
+            for a in module.annotations_on(node.lineno, "guarded-by"):
+                guarded.setdefault(attr, set()).add(a.lock)
+
+        # Inference: owning a lock marks the class threaded (the lock
+        # exists *because* of cross-thread access — SpanTracer never
+        # spawns a Thread itself yet is mutated from every session
+        # thread).  An attr is guarded by the intersection of held-lock
+        # sets over its non-__init__ locked writes, unless an explicit
+        # annotation already names a lock.
+        locked_by_attr: dict[str, list] = {}
+        for attr, node, held, func in writes:
+            if func.name == "__init__" or attr in lock_attrs:
+                continue
+            locked_by_attr.setdefault(attr, []).append(held & lock_attrs)
+        for attr, heldsets in locked_by_attr.items():
+            if attr in guarded:
+                continue
+            nonempty = [h for h in heldsets if h]
+            if not nonempty:
+                continue
+            common = set.intersection(*nonempty)
+            if common:
+                guarded[attr] = common
+
+        for attr, node, held, func in writes:
+            if func.name == "__init__" or attr not in guarded:
+                continue
+            want = guarded[attr]
+            if held & want:
+                continue
+            lock_name = sorted(want)[0]
+            yield Finding(
+                rule=self.rule_id,
+                path=module.path,
+                line=node.lineno,
+                message=(
+                    f"{cls.name}.{attr} is guarded by self.{lock_name} but "
+                    f"written here without holding it"
+                ),
+                hint=(
+                    f"wrap in 'with self.{lock_name}:' or annotate the "
+                    f"enclosing def with '# odlint: holds-lock({lock_name})'"
+                ),
+            )
+
+    def _methods(self, cls: ast.ClassDef) -> list:
+        return [
+            n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+
+    def _lock_attrs(self, cls: ast.ClassDef) -> set:
+        attrs = set()
+        for func in self._methods(cls):
+            for stmt in ast.walk(func):
+                if not isinstance(stmt, ast.Assign):
+                    continue
+                if not isinstance(stmt.value, ast.Call):
+                    continue
+                if call_name(stmt.value) not in _LOCK_CTORS:
+                    continue
+                for t in stmt.targets:
+                    attr = _self_attr(t)
+                    if attr is not None:
+                        attrs.add(attr)
+        return attrs
+
+    def _collect_writes(self, module, func, body, held, out) -> None:
+        """Walk statements tracking the set of held self-locks."""
+        for stmt in body:
+            if isinstance(stmt, ast.With):
+                inner = set(held) | set(_with_held_locks(stmt))
+                self._collect_writes(module, func, stmt.body, inner, out)
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested defs (thread targets): fresh lock context
+                self._collect_writes(module, stmt, stmt.body, set(), out)
+                continue
+            for attr, node in _assigned_self_attrs(stmt):
+                out.append((attr, node, set(held), func))
+            # recurse into compound statements
+            for field_body in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, field_body, None)
+                if isinstance(sub, list) and sub:
+                    self._collect_writes(module, func, sub, held, out)
+            for handler in getattr(stmt, "handlers", []) or []:
+                self._collect_writes(module, func, handler.body, held, out)
+
+
+# ---------------------------------------------------------------------------
+# ODL002 — donation safety
+# ---------------------------------------------------------------------------
+
+
+class DonationSafetyRule(Rule):
+    """No read of a value after it was passed at a donated position.
+
+    Module scan finds runner factories — functions whose return value is
+    ``jax.jit(f, donate_argnums=...)`` — and maps factory name → donated
+    positions.  Inside every function, calls through a variable or
+    ``self.<attr>`` bound to such a factory mark the Name / self-attr
+    arguments at donated positions dead; a later load of a dead name is
+    a finding.  Reassignment (including in the same statement, the
+    repo's idiom) revives it.  ``If`` branches merge dead sets by
+    union (a read that is dead on any path is flagged); loops are
+    checked one pass, conservatively.
+    """
+
+    rule_id = "ODL002"
+    title = "use after donation to a jitted runner"
+    rationale = (
+        "donated buffers are invalidated by XLA; reading one returns "
+        "garbage or raises only on some backends (engine/stream.py "
+        "double-buffer idiom makes this easy to get wrong)"
+    )
+
+    def check_module(self, module: Module, project: Project):
+        factories = self._donating_factories(module.tree)
+        if not factories:
+            return
+        bindings = self._bindings(module.tree, factories)
+        for func in _iter_funcs(module.tree):
+            yield from self._check_func(module, func, factories, bindings)
+
+    # -- factory discovery --------------------------------------------------
+
+    def _donating_factories(self, tree: ast.Module) -> dict:
+        """name -> set of donated positional indices."""
+        out = {}
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for ret in ast.walk(node):
+                if not isinstance(ret, ast.Return) or ret.value is None:
+                    continue
+                nums = self._jit_donate_argnums(ret.value)
+                if nums:
+                    out[node.name] = nums
+        return out
+
+    def _jit_donate_argnums(self, node: ast.AST) -> set:
+        if not isinstance(node, ast.Call):
+            return set()
+        if call_name(node) not in ("jax.jit", "jit"):
+            return set()
+        for kw in node.keywords:
+            if kw.arg != "donate_argnums":
+                continue
+            return self._argnum_values(kw.value)
+        return set()
+
+    def _argnum_values(self, node: ast.AST) -> set:
+        """Constant tuple → indices; IfExp → union of both arms."""
+        if isinstance(node, ast.IfExp):
+            return self._argnum_values(node.body) | self._argnum_values(node.orelse)
+        if isinstance(node, ast.Tuple):
+            out = set()
+            for el in node.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                    out.add(el.value)
+            return out
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return {node.value}
+        return set()
+
+    def _bindings(self, tree: ast.Module, factories: dict) -> dict:
+        """'name' or 'self.attr' -> donated positions, from assignments."""
+        out = {}
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not isinstance(node.value, ast.Call):
+                continue
+            fname = call_name(node.value)
+            if fname not in factories:
+                continue
+            for t in node.targets:
+                key = self._value_key(t)
+                if key:
+                    out[key] = factories[fname]
+        return out
+
+    # -- per-function dataflow ----------------------------------------------
+
+    def _value_key(self, node: ast.AST) -> str:
+        if isinstance(node, ast.Name):
+            return node.id
+        attr = _self_attr(node)
+        if attr is not None:
+            return f"self.{attr}"
+        return ""
+
+    def _check_func(self, module, func, factories, bindings):
+        findings: list[Finding] = []
+        self._walk(module, func.body, factories, bindings, set(), findings)
+        return findings
+
+    def _walk(self, module, body, factories, bindings, dead, findings) -> None:
+        """dead: set of value-keys whose buffer was donated."""
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._walk(module, stmt.body, factories, bindings, set(), findings)
+                continue
+            if isinstance(stmt, ast.If):
+                d1 = set(dead)
+                d2 = set(dead)
+                self._stmt_reads(module, stmt.test, dead, findings)
+                self._walk(module, stmt.body, factories, bindings, d1, findings)
+                self._walk(module, stmt.orelse, factories, bindings, d2, findings)
+                dead.clear()
+                dead.update(d1 | d2)
+                continue
+            if isinstance(stmt, (ast.For, ast.While)):
+                if isinstance(stmt, ast.For):
+                    self._stmt_reads(module, stmt.iter, dead, findings)
+                    dead.discard(self._value_key(stmt.target))
+                else:
+                    self._stmt_reads(module, stmt.test, dead, findings)
+                self._walk(module, stmt.body, factories, bindings, dead, findings)
+                self._walk(module, stmt.orelse, factories, bindings, dead, findings)
+                continue
+            if isinstance(stmt, (ast.With, ast.Try)):
+                for field_body in ("body", "orelse", "finalbody"):
+                    sub = getattr(stmt, field_body, None)
+                    if isinstance(sub, list):
+                        self._walk(module, sub, factories, bindings, dead, findings)
+                for handler in getattr(stmt, "handlers", []) or []:
+                    self._walk(module, handler.body, factories, bindings, dead,
+                               findings)
+                continue
+
+            # simple statement: reads first (RHS), then donation marks,
+            # then assignment targets revive.
+            value = getattr(stmt, "value", None)
+            donated_now = []
+            if value is not None:
+                for call in [n for n in ast.walk(value) if isinstance(n, ast.Call)]:
+                    nums = self._call_donations(call, factories, bindings)
+                    if not nums:
+                        continue
+                    # a *args splat makes positional indices unknowable —
+                    # skip rather than mis-attribute donation
+                    if any(isinstance(a, ast.Starred) for a in call.args):
+                        continue
+                    for i in nums:
+                        if i < len(call.args):
+                            key = self._value_key(call.args[i])
+                            if key:
+                                donated_now.append((key, call))
+                self._stmt_reads(module, value, dead, findings)
+            for key, call in donated_now:
+                dead.add(key)
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    self._revive_target(t, dead)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                if isinstance(stmt, ast.AugAssign):
+                    self._stmt_reads(module, stmt.target, dead, findings)
+                if stmt.target is not None:
+                    self._revive_target(stmt.target, dead)
+
+    def _call_donations(self, call, factories, bindings) -> set:
+        key = ""
+        if isinstance(call.func, ast.Name):
+            key = call.func.id
+        else:
+            attr = _self_attr(call.func)
+            if attr is not None:
+                key = f"self.{attr}"
+        if key in bindings:
+            return bindings[key]
+        if key in factories:
+            return set()  # calling the factory itself donates nothing
+        return set()
+
+    def _revive_target(self, t: ast.AST, dead: set) -> None:
+        key = self._value_key(t)
+        if key:
+            dead.discard(key)
+            return
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                self._revive_target(el, dead)
+        elif isinstance(t, ast.Starred):
+            self._revive_target(t.value, dead)
+
+    def _stmt_reads(self, module, expr, dead, findings) -> None:
+        if expr is None or not dead:
+            return
+        for node in ast.walk(expr):
+            key = ""
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                key = node.id
+            else:
+                attr = _self_attr(node)
+                if attr is not None and isinstance(
+                    getattr(node, "ctx", ast.Load()), ast.Load
+                ):
+                    key = f"self.{attr}"
+            if key and key in dead:
+                findings.append(
+                    Finding(
+                        rule=self.rule_id,
+                        path=module.path,
+                        line=node.lineno,
+                        message=(
+                            f"'{key}' is read after being passed at a donated "
+                            f"position of a jitted runner"
+                        ),
+                        hint=(
+                            "rebind the result over the donated name in the "
+                            "same statement, or drop donation for this arg"
+                        ),
+                    )
+                )
+                dead.discard(key)  # report each donation once
+
+
+# ---------------------------------------------------------------------------
+# ODL003 — counter-mirror completeness
+# ---------------------------------------------------------------------------
+
+
+class CounterMirrorRule(Rule):
+    """StreamStats fields ⊆ telemetry mirror ∪ exclusions; identity keys exist.
+
+    Statically re-derives PR 9's runtime growth guard: every field of
+    ``StreamStats`` must appear in ``telemetry.STREAM_COUNTER_FIELDS``,
+    ``STREAM_GAUGE_FIELDS``, or ``STREAM_MIRROR_EXCLUDED``; every name
+    in those telemetry tuples must exist on ``StreamStats``; and every
+    counter named in ``elastic.reconcile``'s identity key tuple must be
+    a mirrored counter.
+    """
+
+    rule_id = "ODL003"
+    title = "StreamStats / telemetry mirror drift"
+    rationale = (
+        "PR 9 locked the registry view identical to StreamStats with a "
+        "runtime growth guard; this catches the drift at parse time"
+    )
+
+    def check_project(self, project: Project):
+        stream = project.find("engine.stream")
+        telem = project.find("runtime.telemetry")
+        if stream is None or telem is None:
+            return
+
+        fields = self._dataclass_fields(stream, "StreamStats")
+        if fields is None:
+            return
+        mirrors = {}
+        for name in ("STREAM_COUNTER_FIELDS", "STREAM_GAUGE_FIELDS",
+                     "STREAM_MIRROR_EXCLUDED"):
+            val = self._str_tuple(telem, name)
+            if val is None:
+                yield Finding(
+                    rule=self.rule_id,
+                    path=telem.path,
+                    line=1,
+                    message=f"telemetry is missing the {name} tuple",
+                    hint="define it next to sync_stream_stats",
+                )
+                val = ((), 1)
+            mirrors[name] = val
+        mirrored = set()
+        for name, (vals, line) in mirrors.items():
+            for v in vals:
+                if v not in fields:
+                    yield Finding(
+                        rule=self.rule_id,
+                        path=telem.path,
+                        line=line,
+                        message=(
+                            f"{name} names '{v}' which is not a StreamStats "
+                            f"field"
+                        ),
+                        hint="remove it or add the field to StreamStats",
+                    )
+            mirrored |= set(vals)
+        for fname, fline in fields.items():
+            if fname not in mirrored:
+                yield Finding(
+                    rule=self.rule_id,
+                    path=stream.path,
+                    line=fline,
+                    message=(
+                        f"StreamStats.{fname} is neither mirrored "
+                        f"(STREAM_COUNTER_FIELDS/STREAM_GAUGE_FIELDS) nor "
+                        f"excluded (STREAM_MIRROR_EXCLUDED) in telemetry"
+                    ),
+                    hint="add it to the mirror or the explicit exclusion set",
+                )
+
+        # identity keys in elastic.reconcile must be mirrored counters
+        elastic = project.find("runtime.elastic")
+        counters = set(mirrors["STREAM_COUNTER_FIELDS"][0])
+        if elastic is not None and counters:
+            for node in ast.walk(elastic.tree):
+                if not (isinstance(node, ast.FunctionDef)
+                        and node.name == "reconcile"):
+                    continue
+                for sub in ast.walk(node):
+                    if not isinstance(sub, ast.Assign):
+                        continue
+                    if not any(
+                        isinstance(t, ast.Name) and t.id == "keys"
+                        for t in sub.targets
+                    ):
+                        continue
+                    if not isinstance(sub.value, ast.Tuple):
+                        continue
+                    for el in sub.value.elts:
+                        s = str_const(el)
+                        if s is not None and s not in counters:
+                            yield Finding(
+                                rule=self.rule_id,
+                                path=elastic.path,
+                                line=el.lineno,
+                                message=(
+                                    f"reconcile() keys names '{s}' which is "
+                                    f"not a mirrored StreamStats counter"
+                                ),
+                                hint=(
+                                    "fix the key or add the counter to "
+                                    "STREAM_COUNTER_FIELDS"
+                                ),
+                            )
+
+    def _dataclass_fields(self, module: Module, cls_name: str) -> Optional[dict]:
+        for cls in _iter_classes(module.tree):
+            if cls.name != cls_name:
+                continue
+            fields = {}
+            for stmt in cls.body:
+                if isinstance(stmt, ast.AnnAssign) and isinstance(
+                    stmt.target, ast.Name
+                ):
+                    fields[stmt.target.id] = stmt.lineno
+            return fields
+        return None
+
+    def _str_tuple(self, module: Module, name: str):
+        """((values...), lineno) for a module-level tuple of str consts."""
+        for stmt in module.tree.body:
+            if not isinstance(stmt, ast.Assign):
+                continue
+            if not any(
+                isinstance(t, ast.Name) and t.id == name for t in stmt.targets
+            ):
+                continue
+            vals = []
+            value = stmt.value
+            if isinstance(value, ast.Call) and call_name(value) in (
+                "frozenset", "set", "tuple"
+            ):
+                value = value.args[0] if value.args else ast.Tuple(elts=[])
+            if isinstance(value, (ast.Tuple, ast.List, ast.Set)):
+                for el in value.elts:
+                    s = str_const(el)
+                    if s is not None:
+                        vals.append(s)
+            return tuple(vals), stmt.lineno
+        return None
+
+
+# ---------------------------------------------------------------------------
+# ODL004 — wire-protocol exhaustiveness
+# ---------------------------------------------------------------------------
+
+
+class WireExhaustivenessRule(Rule):
+    """Every sent control 'kind' has a worker handler branch, and back.
+
+    Sent kinds: string literals under a ``"kind"`` key in dict literals
+    passed to ``self._request(...)`` / ``_encode_frame(...)`` in
+    ``runtime/elastic.py``.  Handled kinds: string literals compared
+    against (a variable assigned from) ``header.get("kind")`` in
+    ``runtime/worker.py``.  Also: ``snapshot.py`` must reference the
+    frame version symbolically (``rpc_mod.WIRE_V2`` / ``WIRE_V2``), not
+    re-declare a literal version byte that can drift from ``rpc.py``.
+    """
+
+    rule_id = "ODL004"
+    title = "wire 'kind' without a matching handler (or version drift)"
+    rationale = (
+        "PR 8's control protocol grows a kind per feature (metrics came "
+        "in PR 9); a sent-but-unhandled kind fails at runtime on the "
+        "first scrape"
+    )
+
+    def check_project(self, project: Project):
+        elastic = project.find("runtime.elastic")
+        worker = project.find("runtime.worker")
+        if elastic is not None and worker is not None:
+            sent = self._sent_kinds(elastic)
+            handled = self._handled_kinds(worker)
+            for kind, line in sorted(sent.items()):
+                if kind not in handled:
+                    yield Finding(
+                        rule=self.rule_id,
+                        path=elastic.path,
+                        line=line,
+                        message=(
+                            f"control kind '{kind}' is sent by WorkerClient "
+                            f"but has no handler branch in runtime/worker.py"
+                        ),
+                        hint="add a branch on header.get('kind') in Worker._handle",
+                    )
+            for kind, line in sorted(handled.items()):
+                if kind not in sent:
+                    yield Finding(
+                        rule=self.rule_id,
+                        path=worker.path,
+                        line=line,
+                        message=(
+                            f"worker handles control kind '{kind}' that no "
+                            f"WorkerClient call site sends (dead protocol arm)"
+                        ),
+                        hint="remove the branch or add the client sender",
+                    )
+
+        snapshot = project.find("engine.snapshot")
+        rpc = project.find("engine.rpc")
+        if snapshot is not None and rpc is not None:
+            yield from self._check_version_bytes(snapshot, rpc)
+
+    def _sent_kinds(self, module: Module) -> dict:
+        out = {}
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted(node.func)
+            if not (fname.endswith("._request") or fname.endswith("_encode_frame")
+                    or fname == "_encode_frame"):
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if not isinstance(arg, ast.Dict):
+                    continue
+                for k, v in zip(arg.keys, arg.values):
+                    if k is not None and str_const(k) == "kind":
+                        s = str_const(v)
+                        if s is not None:
+                            out.setdefault(s, v.lineno)
+        return out
+
+    def _handled_kinds(self, module: Module) -> dict:
+        # variables assigned from <x>.get("kind") — only those; a loop
+        # variable merely *named* "kind" (e.g. the frame-format tag from
+        # rpc._iter_wire) is not a control kind
+        kind_vars = set()
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                call = node.value
+                if (
+                    dotted(call.func).endswith(".get")
+                    and call.args
+                    and str_const(call.args[0]) == "kind"
+                ):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            kind_vars.add(t.id)
+        out = {}
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Compare):
+                operands = [node.left] + list(node.comparators)
+                refs_kind = any(
+                    (isinstance(o, ast.Name) and o.id in kind_vars)
+                    or (
+                        isinstance(o, ast.Call)
+                        and dotted(o.func).endswith(".get")
+                        and o.args
+                        and str_const(o.args[0]) == "kind"
+                    )
+                    for o in operands
+                )
+                if not refs_kind:
+                    continue
+                for o in operands:
+                    s = str_const(o)
+                    if s is not None:
+                        out.setdefault(s, o.lineno)
+                    elif isinstance(o, (ast.Tuple, ast.List, ast.Set)):
+                        for el in o.elts:
+                            s = str_const(el)
+                            if s is not None:
+                                out.setdefault(s, el.lineno)
+        return out
+
+    def _check_version_bytes(self, snapshot: Module, rpc: Module):
+        rpc_versions = {}
+        for stmt in rpc.tree.body:
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name) and t.id.startswith("WIRE_V"):
+                        if isinstance(stmt.value, ast.Constant):
+                            rpc_versions[t.id] = stmt.value.value
+        if not rpc_versions:
+            return
+        # snapshot.py must not re-declare a WIRE_V* literal of its own
+        for stmt in snapshot.tree.body:
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name) and t.id.startswith("WIRE_V"):
+                        if (
+                            isinstance(stmt.value, ast.Constant)
+                            and stmt.value.value != rpc_versions.get(t.id)
+                        ):
+                            yield Finding(
+                                rule=self.rule_id,
+                                path=snapshot.path,
+                                line=stmt.lineno,
+                                message=(
+                                    f"snapshot re-declares {t.id} with a "
+                                    f"value that drifts from rpc.py"
+                                ),
+                                hint="import the constant from engine.rpc instead",
+                            )
+        # snapshot's frame-magic check must reference rpc's symbol
+        uses_symbol = any(
+            isinstance(n, (ast.Attribute, ast.Name))
+            and dotted(n).split(".")[-1] in rpc_versions
+            for n in ast.walk(snapshot.tree)
+        )
+        if not uses_symbol:
+            yield Finding(
+                rule=self.rule_id,
+                path=snapshot.path,
+                line=1,
+                message=(
+                    "snapshot never references rpc's WIRE_V* symbols — its "
+                    "frame magic check can silently drift from the wire format"
+                ),
+                hint="compare against rpc_mod.WIRE_V2 (symbol, not literal)",
+            )
+
+
+# ---------------------------------------------------------------------------
+# ODL005 — forbidden APIs
+# ---------------------------------------------------------------------------
+
+
+class ForbiddenApiRule(Rule):
+    """Wall-clock/global RNG in jitted plan paths, bare except on socket
+    paths, print() in the engine.
+
+    * ``time.time``/``time.perf_counter``/``np.random.*``/
+      ``numpy.random.*`` calls inside any function that is jitted
+      (decorated with jax.jit/partial(jax.jit,...) or returned through
+      ``jax.jit(...)``) — traced once, frozen forever.
+    * ``except:`` (bare) in modules that import ``socket`` — swallows
+      KeyboardInterrupt/SystemExit on serving threads.
+    * ``print(...)`` anywhere under ``src/repro/engine/`` — the engine
+      is a library; humans read telemetry, not stdout.
+    """
+
+    rule_id = "ODL005"
+    title = "forbidden API on a hot/serving path"
+    rationale = (
+        "time.time inside a jitted fn is trace-time constant folding in "
+        "disguise; bare except on the PR 5 socket threads ate shutdown "
+        "signals during debugging"
+    )
+
+    _CLOCKS = {"time.time", "time.perf_counter", "time.monotonic"}
+
+    def check_module(self, module: Module, project: Project):
+        jitted = self._jitted_funcs(module.tree)
+        for func in jitted:
+            for node in ast.walk(func):
+                if not isinstance(node, ast.Call):
+                    continue
+                fname = call_name(node)
+                if fname in self._CLOCKS or fname.startswith(
+                    ("np.random.", "numpy.random.")
+                ):
+                    yield Finding(
+                        rule=self.rule_id,
+                        path=module.path,
+                        line=node.lineno,
+                        message=(
+                            f"'{fname}' inside jitted '{func.name}' is frozen "
+                            f"at trace time"
+                        ),
+                        hint="pass the value in as an argument / use jax PRNG keys",
+                    )
+        if self._imports(module.tree, "socket"):
+            for node in ast.walk(module.tree):
+                if isinstance(node, ast.ExceptHandler) and node.type is None:
+                    yield Finding(
+                        rule=self.rule_id,
+                        path=module.path,
+                        line=node.lineno,
+                        message=(
+                            "bare 'except:' in a socket-handling module "
+                            "swallows KeyboardInterrupt/SystemExit"
+                        ),
+                        hint="catch Exception (or OSError) instead",
+                    )
+        if "/engine/" in module.path.replace("\\", "/") or (
+            ".engine." in f".{module.name}."
+        ):
+            for node in ast.walk(module.tree):
+                if (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "print"
+                ):
+                    yield Finding(
+                        rule=self.rule_id,
+                        path=module.path,
+                        line=node.lineno,
+                        message="print() in src/repro/engine/ (library code)",
+                        hint="use telemetry spans/counters or return the value",
+                    )
+
+    def _jitted_funcs(self, tree: ast.Module) -> list:
+        out = []
+        jitted_names = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and call_name(node) in ("jax.jit", "jit"):
+                for arg in node.args[:1]:
+                    if isinstance(arg, ast.Name):
+                        jitted_names.add(arg.id)
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if node.name in jitted_names:
+                out.append(node)
+                continue
+            for dec in node.decorator_list:
+                d = dotted(dec) or (
+                    call_name(dec) if isinstance(dec, ast.Call) else ""
+                )
+                if "jit" in d.split("."):
+                    out.append(node)
+                    break
+                if isinstance(dec, ast.Call) and any(
+                    "jit" in dotted(a).split(".") for a in dec.args
+                ):
+                    out.append(node)
+                    break
+        return out
+
+    def _imports(self, tree: ast.Module, name: str) -> bool:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                if any(alias.name == name for alias in node.names):
+                    return True
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == name:
+                    return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# ODL006 — sharding scope
+# ---------------------------------------------------------------------------
+
+
+class ShardingScopeRule(Rule):
+    """Shard-local calls inside ``activate(mesh)`` need ``deactivate()``.
+
+    Functions annotated ``# odlint: shard-local`` on their ``def`` line
+    issue single-device dispatches.  Any call to one of them that sits
+    lexically inside a ``with sharding.activate(...)`` / ``with
+    activate(...)`` block must be nested under a ``with
+    sharding.deactivate():`` — otherwise GSPMD constraints from the
+    active mesh leak into the shard-local trace (the exact bug PR 7 hit
+    twice).
+    """
+
+    rule_id = "ODL006"
+    title = "shard-local dispatch under an active mesh without deactivate()"
+    rationale = (
+        "PR 7 hit this twice: per-shard sessions traced under the fleet "
+        "mesh pick up full-width GSPMD constraints and either OOM or "
+        "silently gather"
+    )
+
+    def check_module(self, module: Module, project: Project):
+        shard_local = self._shard_local_names(project)
+        if not shard_local:
+            return
+        yield from self._scan(module, module.tree.body, shard_local,
+                              in_activate=False, in_deactivate=False)
+
+    def _shard_local_names(self, project: Project) -> set:
+        # cached per project — this scans every function of every module
+        cached = getattr(project, "_odl006_names", None)
+        if cached is not None:
+            return cached
+        names = set()
+        for mod in project.modules.values():
+            for func in _iter_funcs(mod.tree):
+                end = func.body[0].lineno if func.body else func.lineno
+                if mod.annotation_in_range(func.lineno - 1, end, "shard-local"):
+                    names.add(func.name)
+        project._odl006_names = names
+        return names
+
+    def _with_kind(self, stmt: ast.With) -> str:
+        for item in stmt.items:
+            ctx = item.context_expr
+            if isinstance(ctx, ast.Call):
+                fname = dotted(ctx.func)
+                last = fname.split(".")[-1]
+                if last == "activate":
+                    return "activate"
+                if last == "deactivate":
+                    return "deactivate"
+        return ""
+
+    def _scan(self, module, body, shard_local, in_activate, in_deactivate):
+        for stmt in body:
+            if isinstance(stmt, ast.With):
+                kind = self._with_kind(stmt)
+                if in_activate and not in_deactivate:
+                    for item in stmt.items:
+                        yield from self._check_expr(
+                            module, item.context_expr, shard_local
+                        )
+                yield from self._scan(
+                    module, stmt.body, shard_local,
+                    in_activate or kind == "activate",
+                    (in_deactivate or kind == "deactivate")
+                    and kind != "activate",
+                )
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # a nested def is not executed here; scan it with a
+                # fresh scope (it may be called elsewhere)
+                yield from self._scan(module, stmt.body, shard_local,
+                                      False, False)
+                continue
+            if in_activate and not in_deactivate:
+                # only this statement's own expressions — nested
+                # statement bodies are handled by the recursion below
+                # with their own (possibly deactivated) scope
+                for expr in self._stmt_exprs(stmt):
+                    yield from self._check_expr(module, expr, shard_local)
+            # recurse into compound statements, preserving scope flags
+            for field_body in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, field_body, None)
+                if isinstance(sub, list) and sub:
+                    yield from self._scan(module, sub, shard_local,
+                                          in_activate, in_deactivate)
+            for handler in getattr(stmt, "handlers", []) or []:
+                yield from self._scan(module, handler.body, shard_local,
+                                      in_activate, in_deactivate)
+
+    def _stmt_exprs(self, stmt: ast.stmt):
+        """Direct expression children of a statement (no nested stmts)."""
+        for _name, value in ast.iter_fields(stmt):
+            if isinstance(value, ast.expr):
+                yield value
+            elif isinstance(value, list):
+                for el in value:
+                    if isinstance(el, ast.expr):
+                        yield el
+
+    def _check_expr(self, module, expr, shard_local):
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted(node.func).split(".")[-1]
+            if fname in shard_local:
+                yield Finding(
+                    rule=self.rule_id,
+                    path=module.path,
+                    line=node.lineno,
+                    message=(
+                        f"shard-local '{fname}' called inside an "
+                        f"activate(mesh) scope without sharding.deactivate()"
+                    ),
+                    hint="wrap the call in 'with sharding.deactivate():'",
+                )
+
+
+ALL_RULES = (
+    LockDisciplineRule(),
+    DonationSafetyRule(),
+    CounterMirrorRule(),
+    WireExhaustivenessRule(),
+    ForbiddenApiRule(),
+    ShardingScopeRule(),
+)

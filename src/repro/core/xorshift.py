@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 # Paper coefficients: x ^= x << 7; x ^= x >> 9; x ^= x << 8  (mod 2^16).
 SHIFT_A, SHIFT_B, SHIFT_C = 7, 9, 8

@@ -766,6 +766,7 @@ def run_fleet_shards(
             shards, xs, labels, cfg, mode, teacher_available, chunk)
 
 
+# odlint: shard-local
 def _run_fleet_shards_body(
     shards, xs, labels, cfg, mode, teacher_available, chunk
 ) -> tuple[FleetShards, FleetStepOutput]:

@@ -108,6 +108,7 @@ from typing import Optional
 import numpy as np
 
 from repro.engine.stream import TeacherReply
+from repro.runtime import lockdebug
 from repro.runtime import telemetry as _telemetry
 
 # First byte of every v2 frame.  0x02 (STX) can never start a JSON line,
@@ -349,7 +350,7 @@ class LabelServer:
         # Guards the thread/conn bookkeeping AND the public counters —
         # concurrent per-connection threads must not lose increments
         # (tests assert exact counts).
-        self._tlock = threading.Lock()
+        self._tlock = lockdebug.make_lock("rpc.LabelServer._tlock")
         self._threads: list[threading.Thread] = []
         self._conns: set[socket.socket] = set()
         self._accepted = 0
@@ -662,7 +663,7 @@ class _WireConnection:
         # steady-state reads must block indefinitely — reply deadlines are
         # enforced per ticket, not by a socket idle timeout.
         self.sock.settimeout(None)
-        self.wlock = threading.Lock()
+        self.wlock = lockdebug.make_lock("rpc._WireConnection.wlock")
         self.broken = False
         self.messages = 0  # request messages actually written
         self.bytes = 0  # request bytes actually written
@@ -771,7 +772,7 @@ class RpcTeacher:
         # socket.
         self._conn = _WireConnection(host, port, connect_timeout_s, secret,
                                      compress=compress)
-        self._lock = threading.Lock()  # pending map + inbox
+        self._lock = lockdebug.make_lock("rpc.RpcTeacher._lock")  # pending map + inbox
         self._next_ticket = 0
         # ticket -> wall deadline; present == still in flight.
         self._pending: dict[int, float] = {}
@@ -960,7 +961,7 @@ class BatchedRpcClient:
         # per connection, i.e. once per teacher host, not once per tenant.
         self._conn = _WireConnection(host, port, connect_timeout_s, secret,
                                      compress=compress)
-        self._cond = threading.Condition()  # queue + pending + inboxes
+        self._cond = lockdebug.make_condition("rpc.BatchedRpcClient._cond")  # queue + pending + inboxes
         self._closed = False
         self._next_ticket = 0
         # ticket -> (owning handle, wall deadline, wire payload); present
@@ -974,7 +975,7 @@ class BatchedRpcClient:
         self._queue: list[tuple[int, int, np.ndarray, np.ndarray]] = []
         self._flush_deadline: Optional[float] = None
         self._tenants: list[BatchedRpcTeacher] = []
-        self._reconnect_lock = threading.Lock()
+        self._reconnect_lock = lockdebug.make_lock("rpc.BatchedRpcClient._reconnect_lock")
         self._reconnect_spent = False  # current broken conn's attempt used
         self.timed_out = 0  # deadline casualties across all tenants
         self.asks_sent = 0  # individual asks across all frames
@@ -1065,7 +1066,7 @@ class BatchedRpcClient:
 
     # -- internals ---------------------------------------------------------
 
-    def _take_locked(self):
+    def _take_locked(self):  # odlint: holds-lock(_cond)
         batch = self._queue[: self.batch_max]
         self._queue = self._queue[self.batch_max:]
         self._flush_deadline = (
@@ -1341,6 +1342,7 @@ def _selftest() -> int:
         # times out into loss and no label ever arrives.
         _, replies = roundtrip(host, port, secret=None, timeout_s=0.5)
         assert not replies, "unauthenticated client must receive nothing"
+    # odlint: disable=ODL005 -- CLI selftest result line, not library code
     print("rpc selftest OK (v1 + v2 + zlib + batched + hmac + reject):", want)
     return 0
 
@@ -1368,6 +1370,7 @@ def main(argv=None) -> int:
                          delay_s=args.delay_ms / 1000.0, secret=args.secret,
                          loss_prob=args.loss_prob,
                          jitter_s=args.jitter_ms / 1000.0)
+    # odlint: disable=ODL005 -- CLI contract: launchers parse this PORT line
     print(f"PORT {server.port}", flush=True)
     server.serve_forever()
     return 0

@@ -686,6 +686,7 @@ class StreamSession:
     def started(self) -> bool:
         return self._t_start is not None
 
+    # odlint: shard-local
     def start(self, x0) -> None:
         """Dispatch the first tick's plan (nothing pending yet)."""
         assert not self.started(), "session already started"
@@ -701,6 +702,7 @@ class StreamSession:
         )
         self._x, self._p = x0, p
 
+    # odlint: shard-local
     def advance(self, nxt) -> None:
         """Finish the current tick (ask → poll → learn) and plan ``nxt``.
 
@@ -868,6 +870,7 @@ class StreamSession:
                 self._learn(args)
         return replies
 
+    # odlint: shard-local
     def finish(
         self, drain: bool = True
     ) -> tuple[EngineState, Optional[FleetStepOutput], StreamStats]:

@@ -18,7 +18,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed import sharding
 from repro.models import attention
-from repro.models.transformer import scan_or_loop
 from repro.models.layers import (
     Leaf,
     cast,
@@ -27,6 +26,7 @@ from repro.models.layers import (
     sinusoidal_embedding,
     stack_schema,
 )
+from repro.models.transformer import scan_or_loop
 
 
 def _ln(d):

@@ -10,7 +10,7 @@ bookkeeping to drift out of sync.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -24,8 +24,6 @@ ShapeDtypeStructs for the multi-pod dry-run.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import NamedTuple, Optional
 
 import jax

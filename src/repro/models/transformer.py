@@ -29,7 +29,6 @@ from repro.models import attention, moe, rglru, ssm
 from repro.models.layers import (
     Leaf,
     cast,
-    gelu_mlp,
     rmsnorm,
     stack_schema,
     swiglu,

@@ -39,11 +39,11 @@ import os
 import socket
 import subprocess
 import sys
-import threading
 import time
 from typing import Optional
 
 from repro.engine import rpc, snapshot
+from repro.runtime import lockdebug
 from repro.runtime import telemetry as _telemetry
 from repro.runtime import worker as worker_mod
 
@@ -80,7 +80,7 @@ class WorkerClient:
         self._sock.settimeout(None)
         self._file = self._sock.makefile("rb")
         self._frames = rpc._iter_wire(self._file)
-        self._lock = threading.Lock()
+        self._lock = lockdebug.make_lock("elastic.WorkerClient._lock")
 
     def _request(self, header: dict, payload: bytes = b"") -> tuple[dict, bytes]:
         header = dict(header)

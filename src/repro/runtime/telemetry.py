@@ -54,11 +54,13 @@ import threading
 import time
 from typing import Optional
 
+from repro.runtime import lockdebug
+
 __all__ = [
     "Registry", "SpanTracer", "Telemetry", "TELEMETRY",
     "enable", "disable", "get",
     "sync_stream_stats", "parse_prometheus", "check_stream_identity",
-    "STREAM_COUNTER_FIELDS", "STREAM_GAUGE_FIELDS",
+    "STREAM_COUNTER_FIELDS", "STREAM_GAUGE_FIELDS", "STREAM_MIRROR_EXCLUDED",
 ]
 
 
@@ -86,7 +88,7 @@ class Registry:
     """
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = lockdebug.make_lock("telemetry.Registry._lock")
         # name -> {label_key: value}
         self._counters: "dict[str, dict[tuple, float]]" = {}
         self._gauges: "dict[str, dict[tuple, float]]" = {}
@@ -207,7 +209,7 @@ class SpanTracer:
         self.capacity = int(capacity)
         self.sample = max(1, int(sample))
         self._ring: "collections.deque" = collections.deque(maxlen=self.capacity)
-        self._lock = threading.Lock()
+        self._lock = lockdebug.make_lock("telemetry.SpanTracer._lock")
         self._seq: "dict[str, int]" = {}
         self.dropped = 0  # sampled-out spans (visibility into what's missing)
 
@@ -216,9 +218,11 @@ class SpanTracer:
             with self._lock:
                 n = self._seq.get(name, 0)
                 self._seq[name] = n + 1
-            if n % self.sample:
-                self.dropped += 1
-                return None
+                if n % self.sample:
+                    # Bumped by every session thread — a plain += outside
+                    # the lock loses updates under contention.
+                    self.dropped += 1  # odlint: guarded-by(_lock)
+                    return None
         return (name, time.monotonic_ns())
 
     def end(self, token, **labels) -> None:
@@ -288,7 +292,7 @@ class SpanTracer:
         self._ring.clear()
         with self._lock:
             self._seq.clear()
-        self.dropped = 0
+            self.dropped = 0
 
 
 class Telemetry:
@@ -342,6 +346,14 @@ STREAM_COUNTER_FIELDS = (
 
 # Load signals: not monotonic, exported as gauges.
 STREAM_GAUGE_FIELDS = ("tick_rate_ema", "ring_occupancy_hwm")
+
+# StreamStats fields deliberately NOT mirrored into the registry:
+# wall-clock totals and raw per-tick sample deques belong to the
+# end-of-run report (histograms of them would re-aggregate what the
+# spans already carry).  Every StreamStats field must appear in exactly
+# one of COUNTER/GAUGE/EXCLUDED — enforced statically by odlint ODL003
+# and at runtime by tests/test_telemetry.py's growth guard.
+STREAM_MIRROR_EXCLUDED = ("wall_s", "tick_ms", "label_latency_ticks")
 
 
 def sync_stream_stats(registry: Registry, stats, pending: Optional[int] = None,

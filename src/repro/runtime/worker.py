@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.engine import fleet as fleet_mod
 from repro.engine import multiplex, snapshot, stream
+from repro.runtime import lockdebug
 from repro.runtime import telemetry as _telemetry
 
 TICK_KINDS = ("synth", "decode")
@@ -296,7 +297,7 @@ class Worker:
         self._specs: dict[str, dict] = {}
         self._decode_cache: dict = {}
         self._rpc_clients: dict = {}
-        self._lock = threading.RLock()
+        self._lock = lockdebug.make_rlock("worker.Worker._lock")
         self._stop = threading.Event()
         self._sock = socket.create_server((host, port))
         self.host, self.port = self._sock.getsockname()[:2]
@@ -431,7 +432,7 @@ class Worker:
             payload = _json.dumps(tel.tracer.chrome_trace()).encode()
         return header, payload
 
-    def _admit(self, spec: dict, payload: bytes) -> dict:
+    def _admit(self, spec: dict, payload: bytes) -> dict:  # odlint: holds-lock(_lock)
         tree = snapshot.decode_snapshot(payload) if payload else None
         cfg = snapshot.config_from_dict(spec["cfg"])
         tenant = multiplex.Tenant(
@@ -448,11 +449,11 @@ class Worker:
             donate=spec.get("donate"),
         )
         self.mux.admit(tenant, snapshot=tree)
-        self._specs[spec["name"]] = spec
+        self._specs[spec["name"]] = spec  # odlint: guarded-by(_lock)
         return {"kind": "ok", "name": spec["name"],
                 "migrated": tree is not None}
 
-    def _extract(self, name: str) -> tuple[dict, bytes]:
+    def _extract(self, name: str) -> tuple[dict, bytes]:  # odlint: holds-lock(_lock)
         tree, _it = self.mux.extract(name)
         # The partially-consumed iterator stays behind: specs only build
         # seekable sources, so the destination seeks to the snapshot cursor.
@@ -461,7 +462,7 @@ class Worker:
         return {"kind": "snapshot_ok", "spec": spec,
                 "t": snapshot.ticks_consumed(tree)}, wire
 
-    def _result(self, name: str) -> tuple[dict, bytes]:
+    def _result(self, name: str) -> tuple[dict, bytes]:  # odlint: holds-lock(_lock)
         results = self.mux.finished_results()
         if name not in results:
             raise KeyError(f"tenant {name!r} has no finished result here")

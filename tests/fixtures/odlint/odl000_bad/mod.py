@@ -1,0 +1,6 @@
+"""ODL000 firing fixture: a suppression with no reason is a finding."""
+
+
+def f():
+    # odlint: disable=ODL005
+    print("suppressed without a reason")

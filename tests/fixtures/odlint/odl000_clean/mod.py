@@ -1,0 +1,6 @@
+"""ODL000 clean fixture: reasons make suppressions auditable."""
+
+
+def f():
+    # odlint: disable=ODL005 -- demo CLI output, not library code
+    print("suppressed with a reason")

@@ -1,0 +1,16 @@
+"""ODL001 firing fixture: counter written with and without its lock."""
+
+import threading
+
+
+class Meter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+
+    def reset(self):
+        self.count = 0  # unguarded write: lost-update race with bump()

@@ -1,0 +1,20 @@
+"""ODL001 clean fixture: every write holds the lock (or is annotated)."""
+
+import threading
+
+
+class Meter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+
+    def reset(self):
+        with self._lock:
+            self.count = 0
+
+    def _drain_locked(self):  # odlint: holds-lock(_lock)
+        self.count = 0

@@ -1,0 +1,19 @@
+"""ODL002 firing fixture: reading a buffer after donating it."""
+
+import jax
+
+
+def _step_runner(cfg):
+    def step(state, x):
+        return state + x
+
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def run(state, xs, cfg):
+    step = _step_runner(cfg)
+    for x in xs:
+        new_state = step(state, x)
+        print(state.sum())  # state's buffer was donated to step()
+        state = new_state
+    return state

@@ -1,0 +1,17 @@
+"""ODL002 clean fixture: the donated name is rebound by the same call."""
+
+import jax
+
+
+def _step_runner(cfg):
+    def step(state, x):
+        return state + x
+
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def run(state, xs, cfg):
+    step = _step_runner(cfg)
+    for x in xs:
+        state = step(state, x)  # rebinding revives the name
+    return state

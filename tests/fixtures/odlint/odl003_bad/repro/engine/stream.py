@@ -1,0 +1,10 @@
+"""ODL003 firing fixture: a StreamStats counter the mirror never learned."""
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StreamStats:
+    ticks: int = 0
+    queries_issued: int = 0
+    queries_forgotten: int = 0  # new counter, never mirrored or excluded

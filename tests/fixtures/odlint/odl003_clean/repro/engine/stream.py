@@ -1,0 +1,10 @@
+"""ODL003 clean fixture: every field mirrored or explicitly excluded."""
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StreamStats:
+    ticks: int = 0
+    queries_issued: int = 0
+    wall_s: float = 0.0

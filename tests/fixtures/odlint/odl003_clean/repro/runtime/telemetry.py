@@ -1,0 +1,7 @@
+"""Mirror side of the ODL003 clean fixture."""
+
+STREAM_COUNTER_FIELDS = ("ticks", "queries_issued")
+
+STREAM_GAUGE_FIELDS = ()
+
+STREAM_MIRROR_EXCLUDED = ("wall_s",)

@@ -1,0 +1,13 @@
+"""ODL004 firing fixture: the client sends a kind the worker never handles."""
+
+
+class WorkerClient:
+    def _request(self, header, payload=b""):
+        return header, payload
+
+    def status(self):
+        return self._request({"kind": "status"})
+
+    def pause(self):
+        # no worker branch handles "pause" — fails on first use
+        return self._request({"kind": "pause"})

@@ -1,0 +1,9 @@
+"""Handler side of the ODL004 firing fixture."""
+
+
+class Worker:
+    def _handle(self, header, payload):
+        cmd = header.get("kind")
+        if cmd == "status":
+            return {"kind": "status_ok"}, b""
+        return {"kind": "error"}, b""

@@ -1,0 +1,12 @@
+"""ODL004 clean fixture: sent and handled kinds agree exactly."""
+
+
+class WorkerClient:
+    def _request(self, header, payload=b""):
+        return header, payload
+
+    def status(self):
+        return self._request({"kind": "status"})
+
+    def pause(self):
+        return self._request({"kind": "pause"})

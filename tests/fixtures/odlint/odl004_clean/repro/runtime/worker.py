@@ -1,0 +1,11 @@
+"""Handler side of the ODL004 clean fixture."""
+
+
+class Worker:
+    def _handle(self, header, payload):
+        cmd = header.get("kind")
+        if cmd == "status":
+            return {"kind": "status_ok"}, b""
+        if cmd == "pause":
+            return {"kind": "ok"}, b""
+        return {"kind": "error"}, b""

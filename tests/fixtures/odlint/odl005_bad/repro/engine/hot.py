@@ -1,0 +1,20 @@
+"""ODL005 firing fixture: clock in a jitted fn, bare except, engine print."""
+
+import socket
+import time
+
+import jax
+
+
+@jax.jit
+def plan(state, x):
+    t0 = time.time()  # frozen at trace time — every call sees the same t0
+    return state + x, t0
+
+
+def serve(conn: socket.socket):
+    try:
+        conn.sendall(b"ok")
+    except:  # swallows KeyboardInterrupt on the serving thread
+        pass
+    print("served")  # library code talking to stdout

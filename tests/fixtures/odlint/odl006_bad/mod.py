@@ -1,0 +1,14 @@
+"""ODL006 firing fixture: shard-local dispatch under an active mesh."""
+
+from repro.distributed import sharding
+
+
+# odlint: shard-local
+def advance_shard(session, x):
+    return session.step(x)
+
+
+def run(mesh, sessions, xs):
+    with sharding.activate(mesh):
+        for sess, x in zip(sessions, xs):
+            advance_shard(sess, x)  # inherits the mesh scope: constraint leak

@@ -1,0 +1,15 @@
+"""ODL006 clean fixture: shard-local work sits under deactivate()."""
+
+from repro.distributed import sharding
+
+
+# odlint: shard-local
+def advance_shard(session, x):
+    return session.step(x)
+
+
+def run(mesh, sessions, xs):
+    with sharding.activate(mesh):
+        with sharding.deactivate():
+            for sess, x in zip(sessions, xs):
+                advance_shard(sess, x)

@@ -1,0 +1,190 @@
+"""Lock-order cycle detector (REPRO_LOCK_DEBUG=1): unit + integration.
+
+The unit tests drive the acquisition graph directly; the integration
+tests run one real rpc roundtrip and one telemetry workload with
+tracking enabled — the runtime's locks are created through
+``lockdebug.make_*``, so these exercise the actual production lock
+graph and would fail on any inconsistent acquisition order introduced
+there.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.engine import rpc
+from repro.runtime import lockdebug, telemetry
+
+
+@pytest.fixture
+def lock_debug(monkeypatch):
+    monkeypatch.setenv("REPRO_LOCK_DEBUG", "1")
+    lockdebug.GRAPH.clear()
+    yield
+    lockdebug.GRAPH.clear()
+
+
+# ---------------------------------------------------------------------------
+# unit: the graph itself
+# ---------------------------------------------------------------------------
+
+
+def test_plain_locks_when_disabled(monkeypatch):
+    monkeypatch.delenv("REPRO_LOCK_DEBUG", raising=False)
+    assert isinstance(lockdebug.make_lock("x"), type(threading.Lock()))
+    assert not isinstance(lockdebug.make_lock("x"), lockdebug._TrackedLock)
+
+
+def test_consistent_order_is_fine(lock_debug):
+    a, b = lockdebug.make_lock("A"), lockdebug.make_lock("B")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert lockdebug.GRAPH.edges() == {"A": {"B"}}
+
+
+def test_cycle_raises_before_blocking(lock_debug):
+    a, b = lockdebug.make_lock("A"), lockdebug.make_lock("B")
+    with a:
+        with b:
+            pass
+    with pytest.raises(lockdebug.LockOrderError, match="A -> B -> A"):
+        with b:
+            with a:
+                pass
+
+
+def test_three_lock_cycle(lock_debug):
+    a = lockdebug.make_lock("A")
+    b = lockdebug.make_lock("B")
+    c = lockdebug.make_lock("C")
+    with a:
+        with b:
+            pass
+    with b:
+        with c:
+            pass
+    with pytest.raises(lockdebug.LockOrderError):
+        with c:
+            with a:
+                pass
+
+
+def test_rlock_reentrancy_adds_no_edge(lock_debug):
+    r = lockdebug.make_rlock("R")
+    with r:
+        with r:  # reentrant: no self-edge, no false cycle
+            pass
+    assert lockdebug.GRAPH.edges() == {}
+
+
+def test_condition_wait_releases_for_order_purposes(lock_debug):
+    """While cond.wait() sleeps, the underlying lock is NOT held — an
+    acquisition of another lock from the waking path must not see it."""
+    cond = lockdebug.make_condition("C")
+    other = lockdebug.make_lock("O")
+    woke = []
+
+    def waiter():
+        with cond:
+            cond.wait(timeout=5.0)
+            woke.append(True)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    # give the waiter time to enter wait(); then C must not be on any
+    # held stack observed by a fresh acquisition
+    import time
+
+    time.sleep(0.1)
+    with other:
+        pass  # would add C -> O if wait() leaked the hold
+    with cond:
+        cond.notify_all()
+    t.join(timeout=5.0)
+    assert woke
+    assert "C" not in lockdebug.GRAPH.edges().get("C", set())
+    assert "O" not in lockdebug.GRAPH.edges().get("C", set())
+
+
+# ---------------------------------------------------------------------------
+# integration: rpc under REPRO_LOCK_DEBUG=1
+# ---------------------------------------------------------------------------
+
+
+def _drain(handle, want=1, timeout_s=10.0):
+    import time
+
+    out = []
+    deadline = time.monotonic() + timeout_s
+    while len(out) < want and time.monotonic() < deadline:
+        out += handle.poll(0)
+        time.sleep(1e-3)
+    return out
+
+
+def test_rpc_roundtrip_under_lock_debug(lock_debug):
+    server = rpc.LabelServer(n_out=4).start()
+    try:
+        feats = np.zeros((2, 4), np.float32)
+        mask = np.ones(2, bool)
+        with rpc.BatchedRpcClient(
+            "127.0.0.1", server.port, timeout_s=10.0, batch_window_s=1e-3
+        ) as client:
+            # the client's condition + reconnect lock are tracked proxies
+            assert isinstance(
+                client._cond._lock, lockdebug._TrackedLock
+            )
+            assert isinstance(client._reconnect_lock, lockdebug._TrackedLock)
+            t = client.tenant("a")
+            ticket = t.ask(feats, mask, tick=1)
+            replies = _drain(t)
+        assert [r.ticket for r in replies] == [ticket]
+        assert replies[0].labels.tolist() == [
+            rpc.expected_label(1, s, 4) for s in range(2)
+        ]
+    finally:
+        server.close()
+    # the roundtrip completed without LockOrderError and left no lock held
+    assert lockdebug.GRAPH.held_stack() == []
+
+
+# ---------------------------------------------------------------------------
+# integration: telemetry under REPRO_LOCK_DEBUG=1
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_contention_under_lock_debug(lock_debug):
+    tel = telemetry.Telemetry(span_capacity=256, span_sample=2)
+    assert isinstance(tel.registry._lock, lockdebug._TrackedLock)
+    assert isinstance(tel.tracer._lock, lockdebug._TrackedLock)
+
+    n_threads, n_iter = 4, 200
+    errs = []
+
+    def hammer(k):
+        try:
+            for i in range(n_iter):
+                tel.registry.count("odl_test_total", tenant=str(k))
+                tok = tel.tracer.begin("test.span")
+                tel.tracer.end(tok, k=k)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(k,)) for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert not errs
+    # sample=2 drops exactly half of each name's begins — the PR-10 race
+    # fix (increment under the lock) makes this exact under contention
+    assert tel.tracer.dropped == n_threads * n_iter // 2
+    total = sum(
+        tel.registry.get_counter("odl_test_total", tenant=str(k))
+        for k in range(n_threads)
+    )
+    assert total == n_threads * n_iter
+    assert lockdebug.GRAPH.held_stack() == []

@@ -1,0 +1,339 @@
+"""odlint golden tests: fixture pairs, the meta-test, and mutation tests.
+
+Three layers:
+
+* **Fixture pairs** — for every rule a ``<rule>_bad`` tree must fire it
+  and the sibling ``<rule>_clean`` tree must not (clean trees also must
+  not fire *any* rule — a clean fixture that trips a different rule is
+  a fixture bug).
+* **Meta-test** — every rule registered in ``ALL_RULES`` has a firing
+  fixture.  A rule that cannot fire is dead code wearing a badge.
+* **Mutation tests** — copy the *real* sources into a temp tree, delete
+  a mirror entry / a handler branch, and assert the cross-file rules
+  catch the exact drift they exist for.  This pins the rules to the
+  real code's shape, not just to hand-built fixtures.
+
+Pure-stdlib (no jax import) — the whole file runs in milliseconds.
+"""
+
+import json
+import pathlib
+import re
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import core
+from repro.analysis.rules import ALL_RULES
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = pathlib.Path(__file__).resolve().parent / "fixtures" / "odlint"
+
+RULE_IDS = tuple(r.rule_id for r in ALL_RULES)
+
+
+def lint_tree(root: pathlib.Path) -> list:
+    files = core.collect_files([str(root)])
+    assert files, f"no fixture files under {root}"
+    project = core.Project.load(files, root=root)
+    return core.run_rules(project, ALL_RULES)
+
+
+def rules_fired(findings) -> set:
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# Fixture pairs
+# ---------------------------------------------------------------------------
+
+# rule id -> fixture stem; ODL000 is the suppression-hygiene meta-rule
+# enforced by the framework itself rather than a Rule subclass.
+FIXTURE_FOR = {
+    "ODL000": "odl000",
+    "ODL001": "odl001",
+    "ODL002": "odl002",
+    "ODL003": "odl003",
+    "ODL004": "odl004",
+    "ODL005": "odl005",
+    "ODL006": "odl006",
+}
+
+
+@pytest.mark.parametrize("rule_id,stem", sorted(FIXTURE_FOR.items()))
+def test_bad_fixture_fires(rule_id, stem):
+    findings = lint_tree(FIXTURES / f"{stem}_bad")
+    assert rule_id in rules_fired(findings), (
+        f"{rule_id} did not fire on its bad fixture: {findings}"
+    )
+
+
+@pytest.mark.parametrize("rule_id,stem", sorted(FIXTURE_FOR.items()))
+def test_clean_fixture_is_clean(rule_id, stem):
+    findings = lint_tree(FIXTURES / f"{stem}_clean")
+    assert not findings, (
+        f"clean fixture for {rule_id} fired: "
+        f"{[f.format_text() for f in findings]}"
+    )
+
+
+def test_every_shipped_rule_has_a_firing_fixture():
+    """A rule that can't fire is dead."""
+    for rule in ALL_RULES:
+        assert rule.rule_id in FIXTURE_FOR, (
+            f"{rule.rule_id} has no fixture mapping — add "
+            f"tests/fixtures/odlint/<stem>_bad and _clean trees"
+        )
+    # and the mapping has no stale entries beyond the framework rule
+    assert set(FIXTURE_FOR) == set(RULE_IDS) | {"ODL000"}
+
+
+def test_rules_have_ids_titles_rationales():
+    seen = set()
+    for rule in ALL_RULES:
+        assert re.fullmatch(r"ODL\d{3}", rule.rule_id)
+        assert rule.rule_id not in seen, f"duplicate id {rule.rule_id}"
+        seen.add(rule.rule_id)
+        assert rule.title, rule.rule_id
+        assert rule.rationale, rule.rule_id
+
+
+# ---------------------------------------------------------------------------
+# ODL005 fine-grained behaviors
+# ---------------------------------------------------------------------------
+
+
+def test_odl005_flags_all_three_shapes():
+    findings = [
+        f for f in lint_tree(FIXTURES / "odl005_bad") if f.rule == "ODL005"
+    ]
+    msgs = "\n".join(f.message for f in findings)
+    assert "trace time" in msgs, msgs  # clock in jitted fn
+    assert "bare 'except:'" in msgs, msgs
+    assert "print()" in msgs, msgs
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_reasoned_suppression_silences_and_bare_does_not(tmp_path):
+    bad = FIXTURES / "odl001_bad" / "mod.py"
+    src = bad.read_text()
+
+    # same-line reasoned suppression silences the finding
+    reasoned = src.replace(
+        "self.count = 0  # unguarded write: lost-update race with bump()",
+        "self.count = 0  # odlint: disable=ODL001 -- single-threaded teardown",
+    )
+    d1 = tmp_path / "reasoned"
+    d1.mkdir()
+    (d1 / "mod.py").write_text(reasoned)
+    assert "ODL001" not in rules_fired(lint_tree(d1))
+
+    # a bare suppression does NOT silence it and adds ODL000
+    bare = src.replace(
+        "self.count = 0  # unguarded write: lost-update race with bump()",
+        "self.count = 0  # odlint: disable=ODL001",
+    )
+    d2 = tmp_path / "bare"
+    d2.mkdir()
+    (d2 / "mod.py").write_text(bare)
+    fired = rules_fired(lint_tree(d2))
+    assert "ODL001" in fired and "ODL000" in fired
+
+
+def test_standalone_suppression_covers_next_code_line(tmp_path):
+    src = (FIXTURES / "odl001_bad" / "mod.py").read_text()
+    covered = src.replace(
+        "        self.count = 0  # unguarded write: lost-update race with bump()",
+        "        # odlint: disable=ODL001 -- single-threaded teardown\n"
+        "        self.count = 0",
+    )
+    d = tmp_path / "standalone"
+    d.mkdir()
+    (d / "mod.py").write_text(covered)
+    assert "ODL001" not in rules_fired(lint_tree(d))
+
+
+# ---------------------------------------------------------------------------
+# Mutation tests: the cross-file rules vs the REAL sources
+# ---------------------------------------------------------------------------
+
+
+def _real_tree(tmp_path, files) -> pathlib.Path:
+    """Copy real repo modules into a temp repro/ package tree."""
+    root = tmp_path / "tree"
+    for rel in files:
+        dst = root / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(REPO / "src" / rel, dst)
+    return root
+
+
+ODL003_FILES = (
+    "repro/engine/stream.py",
+    "repro/runtime/telemetry.py",
+    "repro/runtime/elastic.py",
+)
+ODL004_FILES = (
+    "repro/runtime/elastic.py",
+    "repro/runtime/worker.py",
+    "repro/engine/rpc.py",
+    "repro/engine/snapshot.py",
+)
+
+
+def test_real_tree_subsets_are_clean(tmp_path):
+    """Precondition for the mutations: the unmutated copies are clean."""
+    root = _real_tree(tmp_path, ODL003_FILES + ODL004_FILES)
+    findings = lint_tree(root)
+    assert not findings, [f.format_text() for f in findings]
+
+
+def test_mutation_deleted_mirror_entry_fires_odl003(tmp_path):
+    root = _real_tree(tmp_path, ODL003_FILES)
+    telem = root / "repro/runtime/telemetry.py"
+    src = telem.read_text()
+    assert '"tickets_reasked",' in src
+    telem.write_text(src.replace('"tickets_reasked",', "", 1))
+    findings = [f for f in lint_tree(root) if f.rule == "ODL003"]
+    assert any("tickets_reasked" in f.message for f in findings), findings
+
+
+def test_mutation_new_stats_field_fires_odl003(tmp_path):
+    root = _real_tree(tmp_path, ODL003_FILES)
+    stream = root / "repro/engine/stream.py"
+    src = stream.read_text()
+    anchor = "    tickets_reasked: int = 0"
+    assert anchor in src
+    stream.write_text(
+        src.replace(anchor, anchor + "\n    queries_forgotten: int = 0", 1)
+    )
+    findings = [f for f in lint_tree(root) if f.rule == "ODL003"]
+    assert any("queries_forgotten" in f.message for f in findings), findings
+
+
+def test_mutation_deleted_handler_branch_fires_odl004(tmp_path):
+    root = _real_tree(tmp_path, ODL004_FILES)
+    worker = root / "repro/runtime/worker.py"
+    src = worker.read_text()
+    anchor = (
+        '                if cmd == "metrics":\n'
+        "                    return self._metrics(bool(header.get(\"trace\", False)))\n"
+    )
+    assert anchor in src, "worker.py metrics branch moved — update the mutation"
+    worker.write_text(src.replace(anchor, "", 1))
+    findings = [f for f in lint_tree(root) if f.rule == "ODL004"]
+    assert any(
+        "'metrics'" in f.message and "no handler" in f.message
+        for f in findings
+    ), findings
+
+
+def test_mutation_new_sent_kind_fires_odl004(tmp_path):
+    root = _real_tree(tmp_path, ODL004_FILES)
+    elastic = root / "repro/runtime/elastic.py"
+    src = elastic.read_text()
+    anchor = 'self._request({"kind": "status"})'
+    assert anchor in src, "elastic.py status sender moved — update the mutation"
+    elastic.write_text(
+        src.replace(
+            anchor,
+            'self._request({"kind": "pause"}) and ' + anchor,
+            1,
+        )
+    )
+    findings = [f for f in lint_tree(root) if f.rule == "ODL004"]
+    assert any("'pause'" in f.message for f in findings), findings
+
+
+def test_mutation_unlocked_write_fires_odl001(tmp_path):
+    """Re-break the PR-10 SpanTracer.dropped race: moving the increment
+    back outside the lock must fire the lock-discipline rule (the write
+    carries a guarded-by annotation)."""
+    root = _real_tree(tmp_path, ("repro/runtime/telemetry.py",))
+    telem = root / "repro/runtime/telemetry.py"
+    src = telem.read_text()
+    anchor = "                    self.dropped += 1  # odlint: guarded-by(_lock)"
+    assert anchor in src, "telemetry.py dropped increment moved"
+    mutated = src.replace(
+        anchor,
+        "                    pass",
+        1,
+    ).replace(
+        "        return (name, time.monotonic_ns())",
+        "        self.dropped += 1  # odlint: guarded-by(_lock)\n"
+        "        return (name, time.monotonic_ns())",
+        1,
+    )
+    telem.write_text(mutated)
+    findings = [f for f in lint_tree(root) if f.rule == "ODL001"]
+    assert any("dropped" in f.message for f in findings), findings
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def run_cli(*args, cwd=None):
+    return subprocess.run(
+        [sys.executable, str(REPO / "tools" / "odlint"), *args],
+        capture_output=True,
+        text=True,
+        cwd=cwd or REPO,
+        timeout=120,
+    )
+
+
+def test_cli_clean_on_repo_exits_zero():
+    proc = run_cli("src/repro")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+def test_cli_findings_exit_one_and_json_report(tmp_path):
+    out = tmp_path / "report.json"
+    proc = run_cli(
+        str(FIXTURES / "odl001_bad"), "--format", "json", "--output", str(out)
+    )
+    assert proc.returncode == 1
+    doc = json.loads(out.read_text())
+    assert doc["tool"] == "odlint"
+    assert any(f["rule"] == "ODL001" for f in doc["findings"])
+    assert {r["id"] for r in doc["rules"]} == set(RULE_IDS)
+
+
+def test_cli_baseline_suppresses_known_findings(tmp_path):
+    base = tmp_path / "baseline.json"
+    target = str(FIXTURES / "odl001_bad")
+    proc = run_cli(target, "--baseline", str(base), "--write-baseline")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    # with the baseline in place the same findings no longer block
+    proc = run_cli(target, "--baseline", str(base))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    # but a different tree's findings still do
+    proc = run_cli(str(FIXTURES / "odl002_bad"), "--baseline", str(base))
+    assert proc.returncode == 1
+
+
+def test_cli_rule_selection():
+    proc = run_cli(str(FIXTURES / "odl001_bad"), "--rules", "ODL004")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    proc = run_cli(str(FIXTURES / "odl001_bad"), "--rules", "NOPE")
+    assert proc.returncode == 2
+    proc = run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rid in RULE_IDS:
+        assert rid in proc.stdout
+
+
+def test_committed_baseline_is_empty():
+    """The tree lints clean, so the committed CI baseline must stay
+    empty — new findings are fixed or reason-suppressed, not baselined."""
+    doc = json.loads((REPO / ".odlint-baseline.json").read_text())
+    assert doc["fingerprints"] == []

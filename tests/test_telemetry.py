@@ -286,15 +286,22 @@ def test_snapshot_restores_load_signal_gauges_but_not_trace_ring():
 
 def test_all_stream_stats_counters_are_mirrored():
     """Growth guard: every integer accounting counter StreamStats gains
-    must be added to STREAM_COUNTER_FIELDS (or explicitly excluded here)."""
-    excluded = {
-        "wall_s",  # derived wall-clock, mirrored nowhere
-        "tick_ms", "label_latency_ticks",  # deques -> p50/p95 summaries
-        "tick_rate_ema", "ring_occupancy_hwm",  # gauges, not counters
-    }
+    must be added to STREAM_COUNTER_FIELDS (or STREAM_MIRROR_EXCLUDED).
+    The exclusion set lives in telemetry so odlint's ODL003 rule and this
+    runtime check enforce the same partition."""
+    excluded = set(telemetry.STREAM_MIRROR_EXCLUDED) | set(
+        telemetry.STREAM_GAUGE_FIELDS
+    )
     fields = {f.name for f in dataclasses.fields(stream.StreamStats)}
     assert fields - excluded == set(telemetry.STREAM_COUNTER_FIELDS)
     assert set(telemetry.STREAM_GAUGE_FIELDS) < fields
+    # the three partitions are disjoint
+    assert not set(telemetry.STREAM_MIRROR_EXCLUDED) & set(
+        telemetry.STREAM_COUNTER_FIELDS
+    )
+    assert not set(telemetry.STREAM_MIRROR_EXCLUDED) & set(
+        telemetry.STREAM_GAUGE_FIELDS
+    )
 
 
 # ---------------------------------------------------------------------------
